@@ -1,0 +1,59 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (one per paper
+table/figure cell) so ``python -m benchmarks.run`` output is machine-
+readable.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict, List, Optional
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row)
+    sys.stdout.flush()
+
+
+def time_call(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+def default_profiles(with_quality: bool = True, fast: bool = False):
+    """The standard benchmark profile set: paper baselines + a bit-sweep."""
+    from repro.core.strategy import BASELINES, StrategyConfig
+    from repro.launch.profile_offline import build_profiles
+
+    strategies = [
+        BASELINES["cachegen"], BASELINES["kivi"], BASELINES["duoattention"],
+        BASELINES["mixhq"],
+        StrategyConfig(quantizer="uniform", key_bits=8, value_bits=8,
+                       granularity="per_channel"),
+        StrategyConfig(quantizer="uniform", key_bits=4, value_bits=4,
+                       granularity="per_channel", codec="zstd3"),
+        StrategyConfig(transform="hadamard", quantizer="uniform", key_bits=4,
+                       value_bits=4, granularity="per_token"),
+    ]
+    qk = {"n_prompts": 3, "decode_tokens": 10} if fast else {}
+    return build_profiles(strategies, with_quality=with_quality,
+                          quality_kwargs=qk)
+
+
+_CACHED_PROFILES = None
+
+
+def cached_profiles():
+    global _CACHED_PROFILES
+    if _CACHED_PROFILES is None:
+        _CACHED_PROFILES = default_profiles(fast=True)
+    return _CACHED_PROFILES

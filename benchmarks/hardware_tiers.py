@@ -1,0 +1,51 @@
+"""Paper Fig. 12 top row: JCT across hardware tiers (consumer 10 Gbps /
+workstation 50 Gbps / datacenter 100 Gbps prefill nodes with different
+compute speeds), scaled to the simulator's calibrated throughputs."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cached_profiles, emit
+from repro.controller import ServiceAwareController
+from repro.data.synthetic import WORKLOADS
+from repro.serving import (
+    GBPS,
+    BandwidthTrace,
+    KVServePolicy,
+    NoCompressionPolicy,
+    SimConfig,
+    Simulator,
+    StaticPolicy,
+    WorkloadMix,
+)
+
+# tier: (bandwidth gbps [scaled 1/100], prefill tokens/s)
+TIERS = {
+    "consumer_10g": (0.10, 12000.0),
+    "workstation_50g": (0.50, 25000.0),
+    "datacenter_100g": (1.00, 60000.0),
+}
+
+
+def run() -> None:
+    profiles = cached_profiles()
+    kivi = next(p for p in profiles if "kivi" in p.strategy.short_name())
+    reqs = lambda: WorkloadMix(rate=2.0, seed=4, q_min=0.0).generate(30)
+
+    for tier, (bw, ptok) in TIERS.items():
+        t0 = time.perf_counter()
+        cfg = SimConfig(prefill_tok_s=ptok)
+        trace = lambda: BandwidthTrace.constant(bw * GBPS)
+        d = Simulator(cfg, NoCompressionPolicy(), trace(), reqs()).run()
+        k = Simulator(cfg, StaticPolicy(kivi, "kivi"), trace(), reqs()).run()
+        c = ServiceAwareController({w: profiles for w in WORKLOADS})
+        kv = Simulator(cfg, KVServePolicy(c), trace(), reqs()).run()
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig12_{tier}", us,
+             f"default={d.mean_jct():.2f}s kivi={k.mean_jct():.2f}s "
+             f"kvserve={kv.mean_jct():.2f}s "
+             f"speedup={d.mean_jct()/kv.mean_jct():.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Fig. 13 (and Fig. 1): JCT across bandwidths in PD separation.
+
+Compares Default(BF16) / CacheGen / KIVI / KVServe over 5-100 Gbps-scale
+effective bandwidths (scaled to the simulator's calibrated throughputs).
+Derived column: mean JCT seconds and speedup over default.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cached_profiles, emit, time_call
+from repro.controller import ServiceAwareController
+from repro.data.synthetic import WORKLOADS
+from repro.serving import (
+    GBPS,
+    BandwidthTrace,
+    KVServePolicy,
+    NoCompressionPolicy,
+    SimConfig,
+    Simulator,
+    StaticPolicy,
+    WorkloadMix,
+)
+
+BANDWIDTHS_GBPS = (0.05, 0.1, 0.25, 0.5, 1.0, 5.0, 25.0, 100.0)
+
+
+def run() -> None:
+    profiles = cached_profiles()
+    by_name = {p.strategy.short_name(): p for p in profiles}
+    cachegen = next(p for n, p in by_name.items() if "cachegen" in n)
+    kivi = next(p for n, p in by_name.items() if "kivi" in n)
+
+    reqs = lambda: WorkloadMix(rate=2.0, seed=0, q_min=0.0).generate(40)
+
+    for bw in BANDWIDTHS_GBPS:
+        trace = BandwidthTrace.constant(bw * GBPS)
+        res = {}
+        t0 = __import__("time").perf_counter()
+        res["default"] = Simulator(SimConfig(), NoCompressionPolicy(), trace,
+                                   reqs()).run().mean_jct()
+        res["cachegen"] = Simulator(SimConfig(), StaticPolicy(cachegen, "cg"),
+                                    trace, reqs()).run().mean_jct()
+        res["kivi"] = Simulator(SimConfig(), StaticPolicy(kivi, "kivi"),
+                                trace, reqs()).run().mean_jct()
+        controller = ServiceAwareController({w: profiles for w in WORKLOADS})
+        res["kvserve"] = Simulator(SimConfig(), KVServePolicy(controller),
+                                   trace, reqs()).run().mean_jct()
+        elapsed = (__import__("time").perf_counter() - t0) * 1e6
+        speedup = res["default"] / res["kvserve"]
+        emit(f"fig13_jct_bw{bw}gbps", elapsed,
+             f"default={res['default']:.2f}s cachegen={res['cachegen']:.2f}s "
+             f"kivi={res['kivi']:.2f}s kvserve={res['kvserve']:.2f}s "
+             f"speedup={speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

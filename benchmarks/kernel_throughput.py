@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: host wall-time of the interpret-mode Pallas
+kernels (correctness-path) plus the *modeled TPU-v5e* bytes/FLOP analysis
+that feeds the roofline (derived column)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import codecs
+from repro.kernels import ops as K
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    t, d, g = 2048, 128, 64
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+
+    for bits in (8, 4):
+        us = time_call(lambda: jax.block_until_ready(
+            K.quant_pack_op(x, bits=bits, group=g)))
+        n_bytes = t * d * 2
+        # modeled TPU: read bf16 tile + write codes+scales, HBM-bound
+        out_bytes = t * d * bits // 8 + t * (d // g) * 2
+        tpu_us = (n_bytes + out_bytes) / 819e9 * 1e6
+        emit(f"kernel_quant_pack_int{bits}", us,
+             f"host_interp modeled_tpu_us={tpu_us:.2f} "
+             f"hbm_bytes={n_bytes+out_bytes}")
+
+    us = time_call(lambda: jax.block_until_ready(K.hadamard_op(x)))
+    flops = 2 * t * d * d
+    tpu_us = max(flops / 197e12, (2 * t * d * 2) / 819e9) * 1e6
+    emit("kernel_hadamard", us, f"modeled_tpu_us={tpu_us:.2f} flops={flops}")
+
+    b, hkv, gq, s = 2, 2, 4, 1024
+    q = jnp.asarray(rng.standard_normal((b, hkv, gq, d)), jnp.float32)
+    k8, ks = K.quantize_ref(jnp.asarray(
+        rng.standard_normal((b, hkv, s, d)), jnp.float32), 8, g)
+    v8, vs = K.quantize_ref(jnp.asarray(
+        rng.standard_normal((b, hkv, s, d)), jnp.float32), 8, g)
+    us = time_call(lambda: jax.block_until_ready(
+        K.decode_attention_op(q, k8, ks, v8, vs, bits=8, group=g)), repeats=1)
+    kv_bytes_int8 = 2 * b * hkv * s * d * 1
+    kv_bytes_bf16 = 2 * b * hkv * s * d * 2
+    emit("kernel_decode_attn_int8", us,
+         f"hbm_traffic_ratio_vs_bf16={kv_bytes_int8/kv_bytes_bf16:.2f} "
+         f"modeled_tpu_us={kv_bytes_int8/819e9*1e6:.2f}")
+
+    # host codec throughput (the real network-path codec)
+    codes = rng.integers(0, 16, size=4 << 20, dtype=np.uint8)
+    for codec in ("none", "zstd3", "bitshuffle_zstd3"):
+        t0 = time.perf_counter()
+        buf = codecs.encode_codes(codes, 4, codec)
+        enc_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        codecs.decode_codes(buf, 4, len(codes), codec)
+        dec_s = time.perf_counter() - t0
+        emit(f"codec_{codec}", enc_s * 1e6,
+             f"enc={len(codes)/enc_s/1e6:.0f}MB/s "
+             f"dec={len(codes)/dec_s/1e6:.0f}MB/s "
+             f"ratio={len(codes)/2/len(buf):.2f}")
+
+
+if __name__ == "__main__":
+    run()

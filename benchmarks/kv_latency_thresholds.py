@@ -1,0 +1,47 @@
+"""Paper Fig. 4: KV latency across effective bandwidths per method, and the
+bandwidth thresholds B* where compression stops being beneficial
+(Theorem 6.1) — the two-intersection structure.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cached_profiles, emit
+from repro.controller import bandwidth_threshold, normalized_latency
+from repro.serving.network import GBPS
+
+
+def run() -> None:
+    profiles = cached_profiles()
+    named = {}
+    for p in profiles:
+        n = p.strategy.short_name()
+        if "cachegen" in n:
+            named["cachegen"] = p
+        elif "kivi" in n:
+            named["kivi"] = p
+        elif "mixhq" in n:
+            named["mixhq"] = p
+
+    t0 = time.perf_counter()
+    for name, p in named.items():
+        bstar = bandwidth_threshold(p)
+        emit(f"fig4_threshold_{name}", (time.perf_counter() - t0) * 1e6,
+             f"cr={p.cr:.2f} s_eff={p.s_eff/1e6:.1f}MB/s "
+             f"Bstar={bstar/GBPS:.2f}Gbps")
+        t0 = time.perf_counter()
+
+    # lower-envelope switching structure: which method is optimal per B
+    for bw_gbps in (0.05, 0.2, 0.5, 1.0, 2.0, 8.0, 32.0):
+        x = 1.0 / (bw_gbps * GBPS)
+        lat = {n: normalized_latency(p, x) for n, p in named.items()}
+        lat["default"] = x
+        best = min(lat, key=lat.get)
+        emit(f"fig4_best_at_{bw_gbps}gbps", 0.0,
+             f"best={best} " + " ".join(f"{n}={v:.3e}" for n, v in lat.items()))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Fig. 15: end-to-end latency decomposed into prefill / compress /
+communication / decompress / decode, per method."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cached_profiles, emit
+from repro.controller import ServiceAwareController
+from repro.data.synthetic import WORKLOADS
+from repro.serving import (
+    GBPS,
+    BandwidthTrace,
+    KVServePolicy,
+    NoCompressionPolicy,
+    SimConfig,
+    Simulator,
+    StaticPolicy,
+    WorkloadMix,
+)
+
+
+def run() -> None:
+    profiles = cached_profiles()
+    kivi = next(p for p in profiles if "kivi" in p.strategy.short_name())
+    cachegen = next(p for p in profiles
+                    if "cachegen" in p.strategy.short_name())
+    trace = lambda: BandwidthTrace.constant(0.1 * GBPS)
+    reqs = lambda: WorkloadMix(rate=2.0, seed=2, q_min=0.0).generate(30)
+
+    policies = {
+        "default": NoCompressionPolicy(),
+        "kivi": StaticPolicy(kivi, "kivi"),
+        "cachegen": StaticPolicy(cachegen, "cg"),
+        "kvserve": KVServePolicy(ServiceAwareController(
+            {w: profiles for w in WORKLOADS})),
+    }
+    for name, pol in policies.items():
+        t0 = time.perf_counter()
+        res = Simulator(SimConfig(), pol, trace(), reqs()).run()
+        bd = res.breakdown()
+        total = sum(bd.values())
+        us = (time.perf_counter() - t0) * 1e6
+        comm_share = 100 * bd["comm"] / max(total, 1e-12)
+        emit(f"fig15_breakdown_{name}", us,
+             f"prefill={bd['prefill']:.2f} compress={bd['compress']:.3f} "
+             f"comm={bd['comm']:.2f} decompress={bd['decompress']:.3f} "
+             f"decode={bd['decode']:.2f} comm_share={comm_share:.0f}%")
+
+
+if __name__ == "__main__":
+    run()

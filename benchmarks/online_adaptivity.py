@@ -1,0 +1,63 @@
+"""Paper Fig. 16-right: controller behaviour under bandwidth fluctuation
+(0-60s trace with a mid-run drop), comparing full KVServe vs w/o Bandit vs
+w/o Controller (max-CR static pick)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cached_profiles, emit
+from repro.controller import ServiceAwareController
+from repro.data.synthetic import WORKLOADS
+from repro.serving import (
+    GBPS,
+    BandwidthTrace,
+    KVServePolicy,
+    SimConfig,
+    Simulator,
+    WorkloadMix,
+)
+
+
+def _trace():
+    # bandwidth drop in the 20-40s window (the paper's shaded region)
+    return BandwidthTrace.steps(
+        [(0.0, 1.0 * GBPS), (20.0, 0.05 * GBPS), (40.0, 1.0 * GBPS)],
+        jitter=0.25, seed=5)
+
+
+def run() -> None:
+    profiles = cached_profiles()
+    reqs = lambda: WorkloadMix(rate=1.2, seed=3, q_min=0.0).generate(70)
+
+    variants = {
+        "kvserve": dict(use_bandit=True, use_envelope=True),
+        "wo_bandit": dict(use_bandit=False, use_envelope=True),
+        "wo_controller": dict(use_bandit=False, use_envelope=False),
+    }
+    results = {}
+    for name, kw in variants.items():
+        t0 = time.perf_counter()
+        controller = ServiceAwareController(
+            {w: profiles for w in WORKLOADS}, **kw)
+        res = Simulator(SimConfig(estimator_alpha=0.5),
+                        KVServePolicy(controller), _trace(), reqs()).run()
+        us = (time.perf_counter() - t0) * 1e6
+        # KV-path latency during the drop window (the paper's spike plot)
+        drop = [r for r in res.requests if 20.0 <= r.arrival <= 40.0]
+        kv_lat = np.mean([r.breakdown.get("compress", 0)
+                          + r.breakdown.get("comm", 0)
+                          + r.breakdown.get("decompress", 0) for r in drop])
+        results[name] = kv_lat
+        emit(f"fig16r_{name}", us,
+             f"mean_jct={res.mean_jct():.2f}s drop_window_kvlat={kv_lat:.2f}s "
+             f"p95={res.p95_jct():.2f}s")
+
+    emit("fig16r_summary", 0.0,
+         f"kvserve_vs_wo_controller="
+         f"{results['wo_controller']/max(results['kvserve'],1e-9):.2f}x_better")
+
+
+if __name__ == "__main__":
+    run()

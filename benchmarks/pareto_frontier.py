@@ -1,0 +1,24 @@
+"""Paper Fig. 10: the 3D Pareto frontier (Acc × CR × Latency)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cached_profiles, emit
+from repro.data.synthetic import WORKLOADS
+from repro.profiling import frontier_from_profiles
+
+
+def run() -> None:
+    profiles = cached_profiles()
+    for w in WORKLOADS:
+        t0 = time.perf_counter()
+        frontier = frontier_from_profiles(profiles, w, ref_bandwidth=1e9)
+        us = (time.perf_counter() - t0) * 1e6
+        tops = sorted(frontier, key=lambda p: -p.cr)[:3]
+        emit(f"fig10_frontier_{w}", us,
+             f"candidates={len(profiles)} frontier={len(frontier)} "
+             + " ".join(f"[acc={p.acc:.2f},cr={p.cr:.1f}]" for p in tops))
+
+
+if __name__ == "__main__":
+    run()

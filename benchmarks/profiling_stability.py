@@ -1,0 +1,47 @@
+"""Paper Fig. 8: (left) sampled-subset accuracy stabilises quickly;
+(right) CR relative rankings are invariant across requests."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import CompressionPipeline, KVCache
+from repro.core.quality import evaluate_quality, get_reference_model
+from repro.core.strategy import BASELINES
+
+
+def run() -> None:
+    ref = get_reference_model()
+
+    # Obs 1: accuracy on growing sample sizes converges to the full value.
+    t0 = time.perf_counter()
+    cfg = BASELINES["kivi"]
+    full = np.mean(list(evaluate_quality(
+        cfg, ref=ref, n_prompts=10, decode_tokens=12, seed=3).values()))
+    errs = []
+    for n in (2, 4, 6):
+        sub = np.mean(list(evaluate_quality(
+            cfg, ref=ref, n_prompts=n, decode_tokens=12, seed=3).values()))
+        errs.append(abs(sub - full))
+    emit("fig8_sampled_acc", (time.perf_counter() - t0) * 1e6,
+         f"full={full:.3f} err_n2={errs[0]:.3f} err_n4={errs[1]:.3f} "
+         f"err_n6={errs[2]:.3f}")
+
+    # Obs 2: CR rankings invariant across different request contents.
+    t0 = time.perf_counter()
+    cfgs = [BASELINES["kivi"], BASELINES["cachegen"], BASELINES["mixhq"]]
+    rankings = []
+    for seed in range(5):
+        kv = KVCache.random(4, 2, 160, 32, seed=seed)
+        crs = [CompressionPipeline(c).compress(kv).compression_ratio()
+               for c in cfgs]
+        rankings.append(tuple(np.argsort(crs).tolist()))
+    stable = len(set(rankings)) == 1
+    emit("fig8_cr_rank_stability", (time.perf_counter() - t0) * 1e6,
+         f"stable={stable} rankings={rankings[0]}")
+
+
+if __name__ == "__main__":
+    run()

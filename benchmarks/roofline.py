@@ -1,0 +1,50 @@
+"""Roofline summary rows from the dry-run artifacts (deliverable g).
+
+Reads dryrun_single.jsonl / dryrun_multi.jsonl when present (produced by
+``python -m repro.launch.dryrun --arch all --shape all --mesh both``);
+otherwise lowers a small representative subset live.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ROOT = Path(__file__).parent.parent
+
+
+def _rows(path: Path):
+    if not path.exists():
+        return []
+    return [json.loads(l) for l in path.open() if l.strip()]
+
+
+def run() -> None:
+    for mesh_name, fname in (("single", "dryrun_single.jsonl"),
+                             ("multi", "dryrun_multi.jsonl")):
+        rows = [r for r in _rows(ROOT / fname) if r.get("status") == "ok"]
+        if not rows:
+            emit(f"roofline_{mesh_name}", 0.0,
+                 f"missing {fname} — run repro.launch.dryrun")
+            continue
+        dominant = {}
+        for r in rows:
+            emit(f"roofline_{mesh_name}_{r['arch']}_{r['shape']}",
+                 r.get("compile_seconds", 0.0) * 1e6,
+                 f"tc={r['t_compute']:.3e} tm={r['t_memory']:.3e} "
+                 f"tx={r['t_collective']:.3e} dom={r['dominant']} "
+                 f"useful={r['useful_ratio']:.2f}")
+            dominant[r["dominant"]] = dominant.get(r["dominant"], 0) + 1
+            if "transfer" in r:
+                t = r["transfer"]
+                emit(f"kvxfer_{mesh_name}_{r['arch']}", 0.0,
+                     f"coll_bytes={t['coll_bytes']:.3e} "
+                     f"tx={t['t_collective']:.4f}s")
+        emit(f"roofline_{mesh_name}_summary", 0.0,
+             f"cells={len(rows)} dominant={dominant}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig13,...]``
+prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+SUITES = [
+    ("fig5_strategy_space", "benchmarks.strategy_space"),
+    ("fig4_kv_latency_thresholds", "benchmarks.kv_latency_thresholds"),
+    ("fig8_profiling_stability", "benchmarks.profiling_stability"),
+    ("fig9_16l_bo_convergence", "benchmarks.bo_convergence"),
+    ("fig10_pareto_frontier", "benchmarks.pareto_frontier"),
+    ("tab1_acc_cr", "benchmarks.acc_cr_table"),
+    ("fig13_jct_vs_bandwidth", "benchmarks.jct_vs_bandwidth"),
+    ("fig14_ttft_prefix_caching", "benchmarks.ttft_prefix_caching"),
+    ("fig15_latency_breakdown", "benchmarks.latency_breakdown"),
+    ("fig16r_online_adaptivity", "benchmarks.online_adaptivity"),
+    ("fig12_hardware_tiers", "benchmarks.hardware_tiers"),
+    ("kernels", "benchmarks.kernel_throughput"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list of suite prefixes")
+    args = ap.parse_args(argv)
+    only = [s for s in args.only.split(",") if s]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, module in SUITES:
+        if only and not any(name.startswith(o) or o in name for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+            print(f"# suite {name} done in {time.time()-t0:.1f}s")
+        except Exception as e:
+            failures += 1
+            print(f"# suite {name} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

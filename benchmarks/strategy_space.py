@@ -1,0 +1,30 @@
+"""Paper Fig. 5: strategy-space size per granularity (left) and the
+latency-accuracy scatter of a profile collection (right)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cached_profiles, emit
+from repro.core.strategy import space_sizes
+from repro.profiling.pareto import profile_latency
+
+
+def run() -> None:
+    t0 = time.perf_counter()
+    sizes = space_sizes()
+    emit("fig5_space_sizes", (time.perf_counter() - t0) * 1e6,
+         f"pipeline={sizes['pipeline']} module={sizes['module']} "
+         f"hybrid={sizes['hybrid']}")
+
+    profiles = cached_profiles()
+    lats = [profile_latency(p, 1e9) for p in profiles]
+    accs = [min(p.quality.values()) if p.quality else 1.0 for p in profiles]
+    emit("fig5_scatter", 0.0,
+         f"n={len(profiles)} lat_spread={max(lats)/max(min(lats),1e-12):.1f}x "
+         f"acc_range=[{min(accs):.3f},{max(accs):.3f}]")
+
+
+if __name__ == "__main__":
+    run()

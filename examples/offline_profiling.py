@@ -1,0 +1,39 @@
+"""The Offline Profiling stage end-to-end: Bayesian search over the module
+space on one workload, Pareto distillation, and the per-bucket policy table
+(lower envelopes) the online controller uses.
+
+    PYTHONPATH=src python examples/offline_profiling.py
+"""
+from repro.controller import build_envelope
+from repro.launch.profile_offline import search_and_build
+from repro.serving.network import GBPS
+
+
+def main():
+    # summlike tolerates compression well; qalike (needle retrieval) is the
+    # adversarial case — try workload="qalike", acc_threshold=0.6 to see the
+    # constraint bite.
+    profiles, frontier = search_and_build(
+        level="module", workload="summlike", acc_threshold=0.85,
+        max_iters=30, verbose=True)
+
+    print(f"\n{len(profiles)} measured profiles; "
+          f"{len(frontier)} on the 3D Pareto frontier:")
+    for pt in sorted(frontier, key=lambda p: -p.cr):
+        print(f"  acc={pt.acc:.3f} cr={pt.cr:5.2f} lat/B={pt.lat:.3e}  "
+              f"{pt.profile.strategy.short_name()}")
+
+    env = build_envelope([pt.profile for pt in frontier])
+    print(f"\npiecewise policy (lower envelope, {len(env.lines)} segments):")
+    prev = 0.0
+    for i, line in enumerate(env.lines):
+        hi = env.breaks[i] if i < len(env.breaks) else float("inf")
+        lo_b = (1.0 / hi) / GBPS if hi > 0 else float("inf")
+        hi_b = (1.0 / prev) / GBPS if prev > 0 else float("inf")
+        print(f"  B in ({lo_b:8.3f}, {hi_b:8.3f}] Gbps -> "
+              f"{line.profile.strategy.short_name()}")
+        prev = hi
+
+
+if __name__ == "__main__":
+    main()

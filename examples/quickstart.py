@@ -1,0 +1,65 @@
+"""Quickstart: compress a KV cache with the unified pipeline, inspect CR
+and error, and pick a profile with the analytical controller.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.controller import (
+    ServiceContext,
+    bandwidth_threshold,
+    build_envelope,
+    predicted_latency,
+)
+from repro.core import (
+    BASELINES,
+    CompressionPipeline,
+    KVCache,
+    StrategyConfig,
+    measure_profile,
+)
+from repro.serving.network import GBPS
+
+
+def main():
+    # --- 1. a KV cache (use your own (L, H, S, D) arrays in practice) ---
+    kv = KVCache.random(num_layers=8, kv_heads=4, seq=512, head_dim=64,
+                        seed=0)
+    print(f"KV cache: {kv.shape}, {kv.nbytes_wire()/1e6:.1f} MB on the wire")
+
+    # --- 2. compress with a few strategies from the modular pool ---
+    strategies = {
+        "kivi-2bit": BASELINES["kivi"],
+        "cachegen": BASELINES["cachegen"],
+        "mixhq": BASELINES["mixhq"],
+        "hadamard+4bit+zstd": StrategyConfig(
+            transform="hadamard", quantizer="uniform", key_bits=4,
+            value_bits=4, granularity="per_token", codec="zstd3"),
+    }
+    profiles = []
+    for name, cfg in strategies.items():
+        pipe = CompressionPipeline(cfg)
+        restored, comp, t_enc, t_dec = pipe.roundtrip(kv)
+        err = np.abs(restored.k - kv.k).mean()
+        print(f"{name:22s} cr={comp.compression_ratio():5.2f}x "
+              f"wire={comp.total_bytes()/1e6:6.2f}MB mae={err:.4f} "
+              f"enc={t_enc*1e3:.0f}ms dec={t_dec*1e3:.0f}ms")
+        profiles.append(measure_profile(cfg, [kv]))
+
+    # --- 3. the service-aware selection (Theorems 6.1/6.2) ---
+    env = build_envelope(profiles)
+    print("\nbandwidth thresholds B* (compression helps only below):")
+    for p in profiles:
+        print(f"  {p.strategy.short_name():40s} "
+              f"B*={bandwidth_threshold(p)/GBPS:.3f} Gbps(scaled)")
+    for gbps in (0.02, 0.2, 2.0):
+        ctx = ServiceContext("qalike", gbps * GBPS, t_slo=0.0, q_min=0.0,
+                             kv_bytes=kv.nbytes_wire())
+        best = env.optimal(1.0 / ctx.bandwidth)
+        print(f"B={gbps:5.2f} Gbps -> optimal: "
+              f"{best.strategy.short_name():40s} "
+              f"T_pred={predicted_latency(best, ctx)*1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Train a small LM for a few hundred steps with checkpoint/restart and
+(optionally) error-feedback gradient compression.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import argparse
+import tempfile
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--grad-bits", type=int, default=0)
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as d:
+        _, _, losses = train(
+            "tiny-lm", steps=args.steps, batch=8, seq=128, lr=3e-3,
+            ckpt_dir=d, ckpt_every=50,
+            grad_compress_bits=args.grad_bits, log_every=25)
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

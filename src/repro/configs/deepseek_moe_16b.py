@@ -1,0 +1,4 @@
+"""Config alias for --arch deepseek-moe-16b (see repro/configs/archs.py)."""
+from repro.configs import get_config
+
+CONFIG = get_config("deepseek-moe-16b")

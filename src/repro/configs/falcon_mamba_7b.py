@@ -1,0 +1,4 @@
+"""Config alias for --arch falcon-mamba-7b (see repro/configs/archs.py)."""
+from repro.configs import get_config
+
+CONFIG = get_config("falcon-mamba-7b")

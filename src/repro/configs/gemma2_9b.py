@@ -1,0 +1,4 @@
+"""Config alias for --arch gemma2-9b (see repro/configs/archs.py)."""
+from repro.configs import get_config
+
+CONFIG = get_config("gemma2-9b")

@@ -1,0 +1,4 @@
+"""Config alias for --arch granite-20b (see repro/configs/archs.py)."""
+from repro.configs import get_config
+
+CONFIG = get_config("granite-20b")

@@ -1,0 +1,4 @@
+"""Config alias for --arch jamba-v0.1-52b (see repro/configs/archs.py)."""
+from repro.configs import get_config
+
+CONFIG = get_config("jamba-v0.1-52b")

@@ -1,0 +1,4 @@
+"""Config alias for --arch llama4-scout-17b-a16e (see repro/configs/archs.py)."""
+from repro.configs import get_config
+
+CONFIG = get_config("llama4-scout-17b-a16e")

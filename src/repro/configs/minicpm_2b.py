@@ -1,0 +1,4 @@
+"""Config alias for --arch minicpm-2b (see repro/configs/archs.py)."""
+from repro.configs import get_config
+
+CONFIG = get_config("minicpm-2b")

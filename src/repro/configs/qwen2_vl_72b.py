@@ -1,0 +1,4 @@
+"""Config alias for --arch qwen2-vl-72b (see repro/configs/archs.py)."""
+from repro.configs import get_config
+
+CONFIG = get_config("qwen2-vl-72b")

@@ -1,0 +1,4 @@
+"""Config alias for --arch qwen3-4b (see repro/configs/archs.py)."""
+from repro.configs import get_config
+
+CONFIG = get_config("qwen3-4b")

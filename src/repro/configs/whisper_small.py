@@ -1,0 +1,4 @@
+"""Config alias for --arch whisper-small (see repro/configs/archs.py)."""
+from repro.configs import get_config
+
+CONFIG = get_config("whisper-small")

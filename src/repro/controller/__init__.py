@@ -1,0 +1,22 @@
+from repro.controller.bandit import BanditConfig, ResidualBandit
+from repro.controller.controller import Decision, ServiceAwareController
+from repro.controller.envelope import (
+    LowerEnvelope,
+    brute_force_optimal,
+    build_envelope,
+)
+from repro.controller.latency_model import (
+    ServiceContext,
+    bandwidth_threshold,
+    baseline_latency,
+    is_beneficial,
+    normalized_latency,
+    predicted_latency,
+)
+
+__all__ = [
+    "BanditConfig", "ResidualBandit", "Decision", "ServiceAwareController",
+    "LowerEnvelope", "brute_force_optimal", "build_envelope",
+    "ServiceContext", "bandwidth_threshold", "baseline_latency",
+    "is_beneficial", "normalized_latency", "predicted_latency",
+]

@@ -1,0 +1,111 @@
+"""The Service-Aware Online Controller (Sec. 6) — ties together:
+
+  1. quality bucketing (restrict to profiles meeting the request's q_min),
+  2. Theorem 6.1 benefit filter (drop non-beneficial profiles at current B),
+  3. Theorem 6.2 lower-envelope O(1) lookup + neighbour candidate set,
+  4. the residual-corrected ε-greedy bandit with SLO guardrails.
+
+``select`` is the <1 ms control-plane decision made at each KV-movement
+boundary; ``observe`` feeds runtime JCT back for residual correction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.profiles import IDENTITY_PROFILE, Profile
+from repro.controller.bandit import BanditConfig, ResidualBandit
+from repro.controller.envelope import LowerEnvelope, build_envelope
+from repro.controller.latency_model import (
+    ServiceContext,
+    bandwidth_threshold,
+    is_beneficial,
+    predicted_latency,
+)
+
+# Quality buckets by *relative accuracy loss* (Sec. 6.1: "bucket profiles by
+# accuracy loss and restrict selection to the matching bucket").  A request
+# with budget q_min maps to the coarsest bucket whose floor still covers it.
+DEFAULT_BUCKETS: Tuple[float, ...] = (0.99, 0.97, 0.95, 0.90, 0.80, 0.70,
+                                      0.50, 0.0)
+
+
+@dataclass
+class Decision:
+    profile: Profile
+    interval: int
+    bucket: int
+    predicted: float
+    candidates: List[Profile] = field(default_factory=list)
+
+
+class ServiceAwareController:
+    def __init__(
+        self,
+        profiles_by_workload: Dict[str, Sequence[Profile]],
+        buckets: Tuple[float, ...] = DEFAULT_BUCKETS,
+        bandit_config: BanditConfig = BanditConfig(),
+        use_bandit: bool = True,
+        use_envelope: bool = True,
+    ):
+        self.buckets = buckets
+        self.use_bandit = use_bandit
+        self.use_envelope = use_envelope
+        # Per (workload, bucket): lower envelope built offline.
+        self._envelopes: Dict[Tuple[str, int], LowerEnvelope] = {}
+        self._bandits: Dict[Tuple[str, int], ResidualBandit] = {}
+        self._profiles = profiles_by_workload
+        for w, profs in profiles_by_workload.items():
+            for bi, q_floor in enumerate(buckets):
+                eligible = [p for p in profs if p.q(w) >= q_floor]
+                self._envelopes[(w, bi)] = build_envelope(eligible)
+                self._bandits[(w, bi)] = ResidualBandit(bandit_config)
+
+    # ------------------------------------------------------------------
+    def _bucket_of(self, q_min: float) -> int:
+        for bi, floor in enumerate(self.buckets):
+            if floor <= q_min or bi == len(self.buckets) - 1:
+                # smallest bucket whose floor still satisfies q_min
+                return bi if floor >= q_min else max(bi - 1, 0)
+        return len(self.buckets) - 1
+
+    # ------------------------------------------------------------------
+    def select(self, ctx: ServiceContext) -> Decision:
+        bucket = self._bucket_of(ctx.q_min)
+        env = self._envelopes.get((ctx.workload, bucket))
+        if env is None or not env.lines:
+            return Decision(IDENTITY_PROFILE, 0, bucket, ctx.kv_bytes / ctx.bandwidth)
+
+        x = 1.0 / max(ctx.bandwidth, 1e-9)
+        if not self.use_envelope:
+            # ablation: pick max-CR profile regardless of service state
+            profs = [l.profile for l in env.lines]
+            p = max(profs, key=lambda q: q.cr)
+            return Decision(p, 0, bucket, predicted_latency(p, ctx), [p])
+
+        interval = env.optimal_index(x)
+        candidates = env.candidates(x, n_neighbors=1)
+        # Theorem 6.1: drop non-beneficial profiles at the current bandwidth.
+        candidates = [p for p in candidates
+                      if p.cr <= 1.0 or is_beneficial(p, ctx.bandwidth)]
+        if not candidates:
+            candidates = [IDENTITY_PROFILE]
+
+        if self.use_bandit:
+            bandit = self._bandits[(ctx.workload, bucket)]
+            p = bandit.select(interval, candidates, ctx)
+        else:
+            p = min(candidates, key=lambda q: predicted_latency(q, ctx))
+
+        return Decision(p, interval, bucket, predicted_latency(p, ctx),
+                        candidates)
+
+    # ------------------------------------------------------------------
+    def observe(self, ctx: ServiceContext, decision: Decision,
+                observed_latency: float) -> None:
+        if not self.use_bandit:
+            return
+        bandit = self._bandits.get((ctx.workload, decision.bucket))
+        if bandit is not None:
+            bandit.update(decision.interval, decision.profile, ctx,
+                          observed_latency)

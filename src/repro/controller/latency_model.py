@@ -1,0 +1,58 @@
+"""The analytical latency model (Sec. 3.2 / 6.1).
+
+  T_p(c)  = T_model(w) + V/s_p + V/(B·cr_p)          (Eq. 1)
+  T_0(c)  = T_model(w) + V/B
+  B*_p    = (1 - 1/cr_p) · s_p                        (Eq. 5, Theorem 6.1)
+  T̃_p(x) = 1/s_p + x/cr_p,  x = 1/B                  (Eq. 6)
+
+Profiles are beneficial iff B < B*_p — independent of V.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.profiles import Profile
+
+
+@dataclass(frozen=True)
+class ServiceContext:
+    """c = (w, B, T_SLO, q_min) — Sec. 3.1."""
+
+    workload: str
+    bandwidth: float        # effective bytes/s (network or IO goodput)
+    t_slo: float            # seconds
+    q_min: float            # minimum relative quality
+    t_model: float = 0.0    # strategy-independent execution time
+    kv_bytes: float = 0.0   # V — uncompressed KV payload of the segment
+
+
+def predicted_latency(p: Profile, c: ServiceContext) -> float:
+    """T_p(c) per Eq. 1."""
+    v = c.kv_bytes
+    s_term = 0.0 if p.s_eff == float("inf") else v / p.s_eff
+    return c.t_model + s_term + v / (c.bandwidth * p.cr)
+
+
+def baseline_latency(c: ServiceContext) -> float:
+    return c.t_model + c.kv_bytes / c.bandwidth
+
+
+def bandwidth_threshold(p: Profile) -> float:
+    """B*_p (Theorem 6.1): beneficial iff B < B*_p."""
+    if p.cr <= 1.0:
+        return 0.0
+    if p.s_eff == float("inf"):
+        return float("inf")
+    return (1.0 - 1.0 / p.cr) * p.s_eff
+
+
+def is_beneficial(p: Profile, bandwidth: float) -> bool:
+    return bandwidth < bandwidth_threshold(p)
+
+
+def normalized_latency(p: Profile, inv_bandwidth: float) -> float:
+    """T̃_p(x) = 1/s_p + x/cr_p (Eq. 6)."""
+    s_term = 0.0 if p.s_eff == float("inf") else 1.0 / p.s_eff
+    return s_term + inv_bandwidth / p.cr

@@ -1,0 +1,69 @@
+"""Canonical host-side KV cache container used on the network path.
+
+Layout: ``k, v : (num_layers, kv_heads, seq, head_dim)`` float32 arrays that
+*logically* represent bf16 wire data (2 bytes/elem), matching the paper's
+BF16 baseline accounting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.strategy import SOURCE_BYTES
+
+
+@dataclass
+class KVCache:
+    k: np.ndarray  # (L, H, S, D)
+    v: np.ndarray  # (L, H, S, D)
+
+    def __post_init__(self):
+        assert self.k.shape == self.v.shape, (self.k.shape, self.v.shape)
+        assert self.k.ndim == 4
+
+    @property
+    def shape(self):
+        return self.k.shape
+
+    @property
+    def num_layers(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def kv_heads(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def seq(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def head_dim(self) -> int:
+        return self.k.shape[3]
+
+    def nbytes_wire(self) -> int:
+        """Bytes of the uncompressed payload on the wire (logical bf16)."""
+        return int(self.k.size + self.v.size) * SOURCE_BYTES
+
+    @staticmethod
+    def random(num_layers=4, kv_heads=4, seq=128, head_dim=64, seed=0,
+               scale: float = 1.0) -> "KVCache":
+        rng = np.random.default_rng(seed)
+        shape = (num_layers, kv_heads, seq, head_dim)
+        # Heavy-tailed, channel-structured data resembling real KV statistics:
+        # per-channel means + a few outlier channels (motivating Hadamard).
+        base_k = rng.standard_normal(shape).astype(np.float32)
+        base_v = rng.standard_normal(shape).astype(np.float32)
+        chan_scale = np.exp(rng.standard_normal((1, 1, 1, head_dim)) * 0.5)
+        outliers = rng.random((1, 1, 1, head_dim)) < 0.03
+        chan_scale = chan_scale * np.where(outliers, 8.0, 1.0)
+        k = (base_k * chan_scale + rng.standard_normal((1, 1, 1, head_dim))) * scale
+        v = base_v * scale
+        return KVCache(k.astype(np.float32), v.astype(np.float32))
+
+    def allclose(self, other: "KVCache", atol=1e-5, rtol=1e-5) -> bool:
+        return bool(
+            np.allclose(self.k, other.k, atol=atol, rtol=rtol)
+            and np.allclose(self.v, other.v, atol=atol, rtol=rtol)
+        )

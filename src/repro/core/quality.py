@@ -1,0 +1,263 @@
+"""Quality proxy: a trained tiny byte-LM measures the workload-dependent
+accuracy impact of each compression strategy (DESIGN.md §8).
+
+``evaluate_quality(strategy)`` returns per-workload *relative accuracy* —
+greedy-decode token agreement against the uncompressed-KV decode, the
+laptop-scale analogue of the paper's "97% relative accuracy" metric.  The
+four synthetic workloads have genuinely different byte statistics, so KV
+compressibility and accuracy rankings differ per workload (Motivation 1).
+"""
+from __future__ import annotations
+
+import os
+from functools import lru_cache
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.kvcache import KVCache
+from repro.core.pipeline import CompressionPipeline
+from repro.core.strategy import StrategyConfig, is_identity
+from repro.data.synthetic import WORKLOADS, make_batch, make_prompt
+from repro.data.tokenizer import ByteTokenizer
+
+CACHE_DIR = Path(os.environ.get("REPRO_CACHE_DIR",
+                                Path.home() / ".cache" / "repro"))
+REF_STEPS = int(os.environ.get("REPRO_REF_STEPS", "400"))
+
+
+# ---------------------------------------------------------------------------
+# Reference model (trained once, cached to disk)
+# ---------------------------------------------------------------------------
+def _params_path(steps: int) -> Path:
+    return CACHE_DIR / f"tiny_lm_s{steps}.npz"
+
+
+def train_reference_model(steps: int = REF_STEPS, seed: int = 0,
+                          batch: int = 16, seq: int = 256,
+                          log_every: int = 0):
+    """Train tiny-lm on the mixed workload soup; returns (cfg, params)."""
+    from repro.distribution.optimizer import OptConfig, init_opt_state
+    from repro.distribution.steps import make_train_step
+    from repro.models import init_params
+
+    cfg = get_config("tiny-lm")
+    params, _ = init_params(cfg, seed=seed)
+    oc = OptConfig(lr=3e-3, warmup_steps=max(steps // 10, 10),
+                   total_steps=steps, schedule="cosine", weight_decay=0.01)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, oc, remat=False))
+    loss = None
+    for i in range(steps):
+        tokens, mask = make_batch("mixed", batch, seq, seed=seed * 100003 + i)
+        b = {"tokens": jnp.asarray(tokens), "mask": jnp.asarray(mask[:, 1:])}
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        if log_every and (i + 1) % log_every == 0:
+            print(f"step {i+1}/{steps} loss={float(metrics['loss']):.3f}")
+        loss = metrics["loss"]
+    return cfg, params, float(loss)
+
+
+def get_reference_model(steps: int = REF_STEPS, seed: int = 0):
+    """Load the cached reference model, training it on first use."""
+    from repro.models import init_params
+
+    cfg = get_config("tiny-lm")
+    path = _params_path(steps)
+    template, _ = init_params(cfg, seed=seed)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    if path.exists():
+        data = np.load(path)
+        loaded = [jnp.asarray(data[f"arr_{i}"]) for i in range(len(leaves))]
+        return cfg, jax.tree_util.tree_unflatten(treedef, loaded)
+    cfg, params, _ = train_reference_model(steps=steps, seed=seed)
+    CACHE_DIR.mkdir(parents=True, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten(params)
+    np.savez(path, **{f"arr_{i}": np.asarray(x) for i, x in enumerate(flat)})
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Cache <-> KVCache conversion (attention layers, dense stacks)
+# ---------------------------------------------------------------------------
+def extract_kv(cfg, caches, batch_idx: int, upto: int) -> KVCache:
+    """Pull one batch element's attention KV as (L, H, S, D) numpy."""
+    from repro.models.transformer import plan_stack
+
+    plan = plan_stack(cfg)
+    ks: List[np.ndarray] = []
+    vs: List[np.ndarray] = []
+    for i, spec in enumerate(plan.prefix_specs):
+        if spec.kind != "attn":
+            continue
+        c = caches["prefix"][f"layer{i}"]
+        ks.append(np.asarray(c["k"][batch_idx, :upto], np.float32).transpose(1, 0, 2))
+        vs.append(np.asarray(c["v"][batch_idx, :upto], np.float32).transpose(1, 0, 2))
+    for blk in range(plan.n_blocks):
+        for j, spec in enumerate(plan.period_specs):
+            if spec.kind != "attn":
+                continue
+            c = caches["blocks"][f"layer{j}"]
+            ks.append(np.asarray(c["k"][blk, batch_idx, :upto],
+                                 np.float32).transpose(1, 0, 2))
+            vs.append(np.asarray(c["v"][blk, batch_idx, :upto],
+                                 np.float32).transpose(1, 0, 2))
+    return KVCache(np.stack(ks), np.stack(vs))
+
+
+def inject_kv(cfg, caches, batch_idx: int, kv: KVCache):
+    """Write a (possibly lossy) KVCache back into the cache pytree."""
+    from repro.models.transformer import plan_stack
+
+    plan = plan_stack(cfg)
+    upto = kv.seq
+    li = 0
+
+    def _store(buf, arr):
+        # arr (H, S, D) -> (S, H, D)
+        return buf.at[batch_idx, :upto].set(
+            jnp.asarray(arr.transpose(1, 0, 2), buf.dtype))
+
+    new_prefix = {}
+    for i, spec in enumerate(plan.prefix_specs):
+        name = f"layer{i}"
+        c = caches["prefix"][name]
+        if spec.kind != "attn":
+            new_prefix[name] = c
+            continue
+        new_prefix[name] = {"k": _store(c["k"], kv.k[li]),
+                            "v": _store(c["v"], kv.v[li])}
+        li += 1
+    new_blocks = dict(caches["blocks"])
+    attn_per_period = len([s for s in plan.period_specs if s.kind == "attn"])
+    for j, spec in enumerate(plan.period_specs):
+        name = f"layer{j}"
+        if spec.kind != "attn":
+            continue
+        c = caches["blocks"][name]
+        # layer indices owned by this period slot, across blocks
+        idxs = [li + n * attn_per_period for n in range(plan.n_blocks)]
+        karr = np.stack([kv.k[i2].transpose(1, 0, 2) for i2 in idxs])
+        varr = np.stack([kv.v[i2].transpose(1, 0, 2) for i2 in idxs])
+        k_buf = c["k"].at[:, batch_idx, :upto].set(jnp.asarray(karr, c["k"].dtype))
+        v_buf = c["v"].at[:, batch_idx, :upto].set(jnp.asarray(varr, c["v"].dtype))
+        new_blocks[name] = {"k": k_buf, "v": v_buf}
+        li += 1
+    return {"prefix": new_prefix, "blocks": new_blocks}
+
+
+# ---------------------------------------------------------------------------
+# Quality evaluation
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=4)
+def _jitted_steps(cfg_name: str, seq: int, batch: int, max_len: int):
+    from repro.models import decode_step, prefill
+
+    cfg = get_config(cfg_name)
+    pre = jax.jit(lambda p, b: prefill(cfg, p, b, max_len=max_len))
+    dec = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    return pre, dec
+
+
+def _prompts_for(workload: str, n: int, seq: int, seed: int
+                 ) -> Tuple[jnp.ndarray, List[str]]:
+    tok = ByteTokenizer()
+    rng = np.random.default_rng(seed)
+    rows, answers = [], []
+    for _ in range(n):
+        prompt, ans = make_prompt(workload, rng, approx_len=seq + 32)
+        ids = tok.encode(prompt)
+        ids = ids[-seq:] if len(ids) >= seq else tok.pad_to(ids, seq)
+        rows.append(ids)
+        answers.append(ans)
+    return jnp.asarray(np.stack(rows)), answers
+
+
+def _greedy_decode(dec_fn, params, caches, first_tokens, start_pos: int,
+                   steps: int) -> np.ndarray:
+    toks = first_tokens  # (B, 1)
+    out = [np.asarray(toks)[:, 0]]
+    pos = jnp.asarray(start_pos, jnp.int32)
+    for t in range(steps):
+        logits, caches = dec_fn(params, caches, toks, pos + t)
+        toks = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(toks)[:, 0])
+    return np.stack(out, axis=1)  # (B, steps+1)
+
+
+def _teacher_forced_agreement(dec_fn, params, caches, ref_tokens: np.ndarray,
+                              start_pos: int) -> float:
+    """Relative accuracy without divergence compounding: feed the reference
+    continuation, compare each step's argmax against the reference's next
+    token (the paper's relative-accuracy analogue)."""
+    b, t1 = ref_tokens.shape
+    pos = jnp.asarray(start_pos, jnp.int32)
+    hits, total = 0, 0
+    for t in range(t1 - 1):
+        toks = jnp.asarray(ref_tokens[:, t:t + 1], jnp.int32)
+        logits, caches = dec_fn(params, caches, toks, pos + t)
+        pred = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        hits += int((pred == ref_tokens[:, t + 1]).sum())
+        total += b
+    return hits / max(total, 1)
+
+
+def evaluate_quality(
+    strategy: StrategyConfig,
+    workloads: Sequence[str] = tuple(WORKLOADS),
+    n_prompts: int = 6,
+    seq: int = 192,
+    decode_tokens: int = 20,
+    seed: int = 0,
+    ref=None,
+    head_scores: Optional[np.ndarray] = None,
+) -> Dict[str, float]:
+    """Per-workload relative accuracy of ``strategy`` on the tiny LM."""
+    if is_identity(strategy):
+        return {w: 1.0 for w in workloads}
+    cfg, params = ref if ref is not None else get_reference_model()
+    gen_budget = decode_tokens + 2
+    pre, dec = _jitted_steps(cfg.name, seq, n_prompts, seq + gen_budget)
+    pipe = CompressionPipeline(strategy, head_scores=head_scores)
+
+    out: Dict[str, float] = {}
+    for wi, w in enumerate(workloads):
+        tokens, _ = _prompts_for(w, n_prompts, seq, seed * 7919 + wi)
+        logits, caches = pre(params, {"tokens": tokens})
+        first = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+
+        # reference decode (uncompressed KV)
+        ref_toks = _greedy_decode(dec, params, caches, first, seq,
+                                  decode_tokens)
+
+        # compressed-KV decode, teacher-forced on the reference tokens
+        comp_caches = caches
+        for b in range(n_prompts):
+            kv = extract_kv(cfg, caches, b, upto=seq)
+            restored = pipe.decompress(pipe.compress(kv))
+            comp_caches = inject_kv(cfg, comp_caches, b, restored)
+        out[w] = _teacher_forced_agreement(dec, params, comp_caches,
+                                           ref_toks, seq)
+    return out
+
+
+def calibrate_head_scores(workload: str = "mixed", n_prompts: int = 4,
+                          seq: int = 192, seed: int = 0, ref=None
+                          ) -> np.ndarray:
+    """Data-driven retrieval-head scores (L, H) from real model KV."""
+    cfg, params = ref if ref is not None else get_reference_model()
+    pre, _ = _jitted_steps(cfg.name, seq, n_prompts, seq + 4)
+    ws = list(WORKLOADS) if workload == "mixed" else [workload]
+    scores = []
+    for wi, w in enumerate(ws):
+        tokens, _ = _prompts_for(w, n_prompts, seq, seed + wi)
+        _, caches = pre(params, {"tokens": tokens})
+        for b in range(min(n_prompts, 2)):
+            kv = extract_kv(cfg, caches, b, upto=seq)
+            centered = kv.k - kv.k.mean(axis=2, keepdims=True)
+            scores.append(np.sqrt((centered**2).mean(axis=(2, 3))))
+    return np.mean(scores, axis=0)

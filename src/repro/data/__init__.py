@@ -1,0 +1,4 @@
+from repro.data.synthetic import WORKLOADS, WorkloadSpec, make_batch, make_prompt
+from repro.data.tokenizer import ByteTokenizer
+
+__all__ = ["WORKLOADS", "WorkloadSpec", "make_batch", "make_prompt", "ByteTokenizer"]

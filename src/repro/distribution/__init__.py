@@ -1,0 +1,14 @@
+from repro.distribution.optimizer import OptConfig, adamw_update, init_opt_state
+from repro.distribution.steps import (
+    loss_fn,
+    make_decode_step,
+    make_eval_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = [
+    "OptConfig", "adamw_update", "init_opt_state", "loss_fn",
+    "make_decode_step", "make_eval_step", "make_prefill_step",
+    "make_train_step",
+]

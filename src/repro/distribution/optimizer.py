@@ -1,0 +1,104 @@
+"""In-house AdamW with cosine and WSD (minicpm) schedules.
+
+Optimizer state shards exactly like the parameters (mu/nu trees share the
+param logical axes), so no extra sharding rules are needed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | wsd | constant
+    wsd_stable_frac: float = 0.8  # WSD: fraction of steps at peak LR
+    grad_clip: float = 1.0
+
+
+def schedule_lr(oc: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    if oc.schedule == "constant":
+        frac = jnp.ones(())
+    elif oc.schedule == "wsd":
+        # Warmup -> Stable -> (linear) Decay, the minicpm schedule.
+        stable_end = oc.total_steps * oc.wsd_stable_frac
+        decay_len = jnp.maximum(oc.total_steps - stable_end, 1.0)
+        frac = jnp.where(
+            s <= stable_end, 1.0,
+            jnp.maximum(1.0 - (s - stable_end) / decay_len, 0.0))
+    else:  # cosine
+        prog = jnp.clip(s / jnp.maximum(oc.total_steps, 1), 0.0, 1.0)
+        frac = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * frac
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32)
+        if not isinstance(x, jax.ShapeDtypeStruct)
+        else jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": (jnp.zeros((), jnp.int32)
+                     if not _is_abstract(params)
+                     else jax.ShapeDtypeStruct((), jnp.int32))}
+
+
+def _is_abstract(tree) -> bool:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
+
+
+def adamw_update(params, grads, state, oc: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule_lr(oc, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / (gnorm + 1e-9)) if oc.grad_clip else 1.0
+
+    b1, b2 = oc.beta1, oc.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+
+    new_params = jax.tree_util.tree_unflatten(tdef, new_p)
+    new_state = {"mu": jax.tree_util.tree_unflatten(tdef, new_mu),
+                 "nu": jax.tree_util.tree_unflatten(tdef, new_nu),
+                 "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,185 @@
+"""Logical-axis -> mesh sharding resolution with divisibility fallback.
+
+Rules follow MaxText conventions: batch over (pod, data); heads / mlp /
+vocab / experts over model (tensor / expert parallelism).  Every mapping is
+validated for divisibility — when an axis doesn't divide (e.g. 8 KV heads on
+a 16-way model axis, or minicpm's 36 heads), the rule falls back to the next
+candidate or to replication, which guarantees that *every* (arch × shape ×
+mesh) cell lowers and compiles; the roofline pass then shows where fallback
+cost lands.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Ordered candidates per logical axis name.
+LOGICAL_RULES: Dict[str, List[Tuple[str, ...]]] = {
+    "batch": [("pod", "data"), ("data",)],
+    "layers": [],
+    "embed": [],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "head_dim": [],
+    "mlp": [("model",)],
+    "expert_mlp": [],
+    "experts": [("model",)],
+    "vocab": [("model",)],
+    "state": [],
+    "seq": [],
+    "kv_seq": [("model",)],  # decode fallback: sequence-sharded KV
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_axes(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[Dict[str, List[Tuple[str, ...]]]] = None,
+) -> P:
+    """Map logical axes to a PartitionSpec, enforcing divisibility and
+    never using a mesh axis twice."""
+    rules = rules or LOGICAL_RULES
+    sizes = mesh_axis_sizes(mesh)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        assigned = None
+        for cand in rules.get(name or "", []):
+            cand = tuple(a for a in cand if a in sizes)
+            if not cand or any(a in used for a in cand):
+                continue
+            prod = int(np.prod([sizes[a] for a in cand]))
+            if prod > 1 and dim % prod == 0:
+                assigned = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        out.append(assigned)
+    return P(*out)
+
+
+def tree_pspecs(axes_tree, shapes_tree, mesh: Mesh, rules=None):
+    """PartitionSpec tree from (axes_tree, value/ShapeDtypeStruct tree)."""
+    def _one(axes, val):
+        return resolve_axes(axes, val.shape, mesh, rules)
+
+    return jax.tree_util.tree_map(
+        _one, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh: Mesh, rules=None):
+    specs = tree_pspecs(axes_tree, shapes_tree, mesh, rules)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Input/cache specs (activations are left to GSPMD propagation beyond these
+# boundary annotations).
+# ---------------------------------------------------------------------------
+def batch_axes_for(mesh: Mesh, batch: int) -> Optional[Tuple[str, ...]]:
+    sizes = mesh_axis_sizes(mesh)
+    for cand in LOGICAL_RULES["batch"]:
+        cand = tuple(a for a in cand if a in sizes)
+        if not cand:
+            continue
+        prod = int(np.prod([sizes[a] for a in cand]))
+        if prod > 1 and batch % prod == 0:
+            return cand
+    return None
+
+
+def kv_cache_pspec(mesh: Mesh, shape: Tuple[int, int, int, int]) -> P:
+    """Cache (B, S, Hkv, D): prefer head sharding, fall back to sequence
+    sharding (flash-decoding style partial attention)."""
+    b, s, h, _ = shape
+    sizes = mesh_axis_sizes(mesh)
+    model = sizes.get("model", 1)
+    bspec = batch_axes_for(mesh, b)
+    bspec = bspec if bspec is None or len(bspec) > 1 else bspec[0]
+    if model > 1 and h % model == 0:
+        return P(bspec, None, "model", None)
+    if model > 1 and s % model == 0:
+        return P(bspec, "model", None, None)
+    return P(bspec, None, None, None)
+
+
+def mamba_state_pspec(mesh: Mesh, shape: Tuple[int, ...]) -> P:
+    """SSM state (B, d_inner, n) / conv state (B, d_inner, k-1)."""
+    b, di = shape[0], shape[1]
+    sizes = mesh_axis_sizes(mesh)
+    model = sizes.get("model", 1)
+    bspec = batch_axes_for(mesh, b)
+    bspec = bspec if bspec is None or len(bspec) > 1 else bspec[0]
+    rest = ["model" if (model > 1 and di % model == 0) else None]
+    rest += [None] * (len(shape) - 2)
+    return P(bspec, *rest)
+
+
+def cache_pspecs(cache_tree, mesh: Mesh):
+    """PartitionSpec tree for a cache pytree (leaves are 4D k/v buffers,
+    stacked 5D block buffers, or 3D mamba states)."""
+    def _one(path, x):
+        shape = tuple(x.shape)
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        stacked = "blocks" in names
+        core = shape[1:] if stacked else shape
+        if len(core) == 4:  # attention cache
+            spec = kv_cache_pspec(mesh, core)
+        elif len(core) in (2, 3):  # mamba ssm/conv state
+            spec = mamba_state_pspec(mesh, core)
+        else:
+            spec = P(*([None] * len(core)))
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(_one, cache_tree)
+
+
+def inputs_pspecs(inputs_tree, mesh: Mesh, cfg=None):
+    """Specs for a step-input pytree (tokens/mask/frames/patches/pos/caches)."""
+    def _one(path, x):
+        if not hasattr(x, "shape"):
+            return None  # static python value (e.g. max_len)
+        shape = tuple(x.shape)
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        if "caches" in names:
+            return None  # handled by cache_pspecs
+        if shape == ():
+            return P()
+        leaf = names[-1] if names else ""
+        if leaf == "positions":  # (3, B, S)
+            bspec = batch_axes_for(mesh, shape[1])
+            bspec = bspec if bspec is None or len(bspec) > 1 else bspec[0]
+            return P(None, bspec, *([None] * (len(shape) - 2)))
+        bspec = batch_axes_for(mesh, shape[0])
+        bspec = bspec if bspec is None or len(bspec) > 1 else bspec[0]
+        return P(bspec, *([None] * (len(shape) - 1)))
+
+    def _full(path, x):
+        spec = _one(path, x)
+        return spec
+
+    specs = jax.tree_util.tree_map_with_path(_full, inputs_tree)
+
+    # Patch cache subtree (if present) with cache-aware specs.
+    if isinstance(inputs_tree, dict) and "caches" in inputs_tree:
+        specs["caches"] = cache_pspecs(inputs_tree["caches"], mesh)
+    return specs
+
+
+def to_named(specs_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,88 @@
+"""Step builders: train_step / prefill_step / decode_step (serve_step).
+
+These are the functions the launcher jits with explicit in/out shardings and
+the dry-run lowers for every (arch × shape × mesh) cell.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distribution.optimizer import OptConfig, adamw_update
+from repro.models import decode_step as model_decode
+from repro.models import forward, prefill
+from repro.models.io import vision_split
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: bool = False):
+    """Next-token loss. batch["tokens"] is (B, T+1) unshifted."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    fwd_batch = {**batch, "tokens": inputs}
+    logits, aux = forward(cfg, params, fwd_batch, remat=remat)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        s_vis = batch["patch_embeds"].shape[1]
+        logits = logits[:, s_vis:, :]
+    mask = batch.get("mask")
+    ce = cross_entropy(logits, targets, mask)
+    return ce + AUX_LOSS_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig, remat: bool = True,
+                    grad_transform: Optional[Callable] = None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat), has_aux=True
+        )(params)
+        if grad_transform is not None:
+            grads, opt_state = grad_transform(grads, opt_state)
+        params, opt_state, om = adamw_update(params, grads, opt_state, oc)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    """(params, batch) -> (last-token logits, caches)."""
+
+    def step(params, batch):
+        return prefill(cfg, params, batch, max_len=max_len)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, caches, tokens, pos) -> (logits, caches) — serve_step."""
+
+    def step(params, caches, tokens, pos):
+        return model_decode(cfg, params, caches, tokens, pos)
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def step(params, batch):
+        loss, parts = loss_fn(cfg, params, batch, remat=False)
+        return {"loss": loss, **parts}
+
+    return step

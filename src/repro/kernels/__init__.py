@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the KV-compression hot paths.
+
+  quant_pack        — fused group-quantize + int4/int8 pack (prefill side)
+  dequant_unpack    — unpack + dequantize (decode side)
+  hadamard          — blockwise Hadamard transform on the MXU
+  decode_attention  — quantized flash-decode attention (int KV read)
+
+Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling, a jit'd
+wrapper in ops.py, and a pure-jnp oracle in ref.py.
+"""
+from repro.kernels.ops import (
+    decode_attention_op,
+    dequant_unpack_op,
+    hadamard_op,
+    quant_pack_op,
+)
+
+__all__ = ["decode_attention_op", "dequant_unpack_op", "hadamard_op",
+           "quant_pack_op"]

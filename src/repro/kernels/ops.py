@@ -1,0 +1,71 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests (the kernel body runs in the Pallas interpreter) and compile to real
+Mosaic kernels on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.hadamard import hadamard_transform as _hadamard
+from repro.kernels.quant_pack import dequant_unpack as _dequant
+from repro.kernels.quant_pack import quant_pack as _quant
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "block_tokens",
+                                             "interpret"))
+def quant_pack_op(x, bits: int = 8, group: int = 64, block_tokens: int = 256,
+                  interpret: Optional[bool] = None):
+    """Fused group-quantize + pack.  x (T, D) -> (codes, scales)."""
+    itp = _default_interpret() if interpret is None else interpret
+    return _quant(x, bits=bits, group=group, block_tokens=block_tokens,
+                  interpret=itp)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "block_tokens",
+                                             "out_dtype", "interpret"))
+def dequant_unpack_op(codes, scales, bits: int = 8, group: int = 64,
+                      block_tokens: int = 256, out_dtype=jnp.bfloat16,
+                      interpret: Optional[bool] = None):
+    itp = _default_interpret() if interpret is None else interpret
+    return _dequant(codes, scales, bits=bits, group=group,
+                    block_tokens=block_tokens, out_dtype=out_dtype,
+                    interpret=itp)
+
+
+@functools.partial(jax.jit, static_argnames=("block_tokens", "interpret"))
+def hadamard_op(x, block_tokens: int = 256, interpret: Optional[bool] = None):
+    itp = _default_interpret() if interpret is None else interpret
+    return _hadamard(x, block_tokens=block_tokens, interpret=itp)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "kv_len",
+                                             "block_s", "interpret"))
+def decode_attention_op(q, k_codes, k_scale, v_codes, v_scale, bits: int = 8,
+                        group: int = 64, kv_len: Optional[int] = None,
+                        block_s: int = 256, interpret: Optional[bool] = None):
+    """Quantized flash-decode attention (see decode_attention.py)."""
+    itp = _default_interpret() if interpret is None else interpret
+    return _decode_attention(q, k_codes, k_scale, v_codes, v_scale, bits=bits,
+                             group=group, kv_len=kv_len, block_s=block_s,
+                             interpret=itp)
+
+
+# Re-export oracles for test convenience.
+quantize_ref = ref.quantize_ref
+dequantize_ref = ref.dequantize_ref
+hadamard_ref = ref.hadamard_ref
+decode_attention_ref = ref.decode_attention_ref
+pack_int4_ref = ref.pack_int4_ref
+unpack_int4_ref = ref.unpack_int4_ref

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+All kernels are validated against these in interpret mode across
+shape/dtype sweeps (tests/test_kernels_*.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Group quantization (symmetric, per-group along the last axis)
+# ---------------------------------------------------------------------------
+def quantize_ref(x: jnp.ndarray, bits: int, group: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (..., D) -> (codes int8 (..., D), scales f32 (..., D/group))."""
+    d = x.shape[-1]
+    assert d % group == 0
+    qmax = (1 << (bits - 1)) - 1
+    xg = x.reshape(x.shape[:-1] + (d // group, group)).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xg), axis=-1)
+    scale = jnp.maximum(amax / qmax, 1e-8)
+    q = jnp.clip(jnp.round(xg / scale[..., None]), -qmax - 1, qmax)
+    return q.reshape(x.shape).astype(jnp.int8), scale
+
+
+def dequantize_ref(codes: jnp.ndarray, scale: jnp.ndarray, group: int,
+                   dtype=jnp.float32) -> jnp.ndarray:
+    d = codes.shape[-1]
+    qg = codes.reshape(codes.shape[:-1] + (d // group, group)).astype(jnp.float32)
+    x = qg * scale[..., None].astype(jnp.float32)
+    return x.reshape(codes.shape).astype(dtype)
+
+
+def pack_int4_ref(codes: jnp.ndarray) -> jnp.ndarray:
+    """int8 codes in [-8,7] -> packed uint8 (last dim halved)."""
+    u = (codes.astype(jnp.int32) + 8).astype(jnp.uint8)
+    return (u[..., 0::2] | (u[..., 1::2] << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_ref(packed: jnp.ndarray) -> jnp.ndarray:
+    lo = (packed & jnp.uint8(0x0F)).astype(jnp.int32) - 8
+    hi = (packed >> jnp.uint8(4)).astype(jnp.int32) - 8
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(packed.shape[:-1] + (packed.shape[-1] * 2,)).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Hadamard transform (orthonormal; D power of two)
+# ---------------------------------------------------------------------------
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    assert n & (n - 1) == 0
+    h = jnp.array([[1.0]], dtype=jnp.float32)
+    while h.shape[0] < n:
+        h = jnp.block([[h, h], [h, -h]])
+    return (h / math.sqrt(n)).astype(dtype)
+
+
+def hadamard_ref(x: jnp.ndarray) -> jnp.ndarray:
+    h = hadamard_matrix(x.shape[-1])
+    return (x.astype(jnp.float32) @ h).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantized flash-decode attention
+# ---------------------------------------------------------------------------
+def decode_attention_ref(
+    q: jnp.ndarray,        # (B, Hkv, Gq, D) f32/bf16 — query heads grouped per kv head
+    k_codes: jnp.ndarray,  # (B, Hkv, S, D) int8
+    k_scale: jnp.ndarray,  # (B, Hkv, S, D/group) f32
+    v_codes: jnp.ndarray,  # (B, Hkv, S, D) int8
+    v_scale: jnp.ndarray,  # (B, Hkv, S, D/group) f32
+    group: int,
+    kv_len: Optional[jnp.ndarray] = None,  # scalar: valid cache slots
+) -> jnp.ndarray:
+    """Attention of one new token against a quantized KV cache."""
+    b, hkv, gq, d = q.shape
+    s = k_codes.shape[2]
+    k = dequantize_ref(k_codes, k_scale, group)  # (B,Hkv,S,D)
+    v = dequantize_ref(v_codes, v_scale, group)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k)
+    scores = scores / math.sqrt(d)
+    if kv_len is not None:
+        mask = jnp.arange(s) < kv_len
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, v)
+    return out.astype(q.dtype)

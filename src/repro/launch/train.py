@@ -1,0 +1,102 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs real training on the available devices (reduced configs on CPU; the
+full configs compile via the dry-run).  Includes checkpoint/restart, WSD or
+cosine schedules, optional gradient compression with error feedback, and a
+crash-recovery path (restore latest checkpoint and continue).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.synthetic import make_batch
+from repro.distribution.grad_compress import init_ef_state, make_grad_transform
+from repro.distribution.optimizer import OptConfig, init_opt_state
+from repro.distribution.steps import make_train_step
+from repro.models import init_params
+
+
+def train(arch: str, steps: int = 100, batch: int = 8, seq: int = 128,
+          lr: float = 3e-3, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 50, grad_compress_bits: int = 0,
+          resume: bool = True, seed: int = 0, log_every: int = 10):
+    cfg = get_config(arch)
+    if cfg.vocab_size > 4096:
+        print(f"[train] full config {arch} is dry-run-only on CPU; "
+              f"use '{arch}-reduced'")
+    params, _ = init_params(cfg, seed=seed)
+    oc = OptConfig(lr=lr, warmup_steps=max(steps // 10, 5), total_steps=steps,
+                   schedule=cfg.lr_schedule, weight_decay=0.01)
+    opt_state = init_opt_state(params)
+
+    grad_transform = None
+    if grad_compress_bits:
+        grad_transform = make_grad_transform(bits=grad_compress_bits)
+        opt_state["ef"] = init_ef_state(params)
+
+    step_fn = jax.jit(make_train_step(cfg, oc, remat=False,
+                                      grad_transform=grad_transform))
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start = 0
+    if mgr is not None and resume and mgr.latest_step() is not None:
+        state_tpl = {"params": params, "opt": opt_state}
+        restored = mgr.restore(state_tpl)
+        params, opt_state = restored["params"], restored["opt"]
+        start = mgr.latest_step()
+        print(f"[train] resumed from step {start}")
+
+    losses = []
+    t0 = time.time()
+    for i in range(start, steps):
+        tokens, mask = make_batch("mixed", batch, seq, seed=seed * 99991 + i)
+        b = {"tokens": jnp.asarray(tokens), "mask": jnp.asarray(mask[:, 1:])}
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        losses.append(float(metrics["loss"]))
+        if log_every and (i + 1) % log_every == 0:
+            print(f"step {i+1}/{steps} loss={losses[-1]:.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/max(i+1-start,1)*1e3:.0f} ms/step)")
+        if mgr is not None and (i + 1) % ckpt_every == 0:
+            mgr.save(i + 1, {"params": params, "opt": opt_state},
+                     metadata={"loss": losses[-1]}, background=True)
+    if mgr is not None:
+        mgr.save(steps, {"params": params, "opt": opt_state},
+                 metadata={"loss": losses[-1] if losses else float("nan")})
+        mgr.wait()
+    return params, opt_state, losses
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny-lm")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compress-bits", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    _, _, losses = train(
+        args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+        lr=args.lr, ckpt_dir=args.ckpt_dir or None,
+        ckpt_every=args.ckpt_every,
+        grad_compress_bits=args.grad_compress_bits, seed=args.seed)
+    print(f"final loss: {losses[-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

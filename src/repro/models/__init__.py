@@ -1,0 +1,13 @@
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+)
+from repro.models.io import make_inputs, make_inputs_for_shape
+
+__all__ = [
+    "decode_step", "forward", "init_cache", "init_params", "prefill",
+    "make_inputs", "make_inputs_for_shape",
+]

@@ -1,0 +1,91 @@
+"""Logical-axis annotated parameters (MaxText-style).
+
+``Pm(value, axes)`` tags every parameter leaf with logical axis names; the
+distribution layer maps logical axes to mesh axes with divisibility fallback
+(see ``repro.distribution.sharding``).  ``split_tree`` separates values from
+axis specs after init.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Pm:
+    """A param leaf paired with its logical axes (one name per dim)."""
+
+    value: Any  # jnp array or jax.ShapeDtypeStruct
+    axes: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.value.shape), (self.axes, self.value.shape)
+
+
+def is_pm(x) -> bool:
+    return isinstance(x, Pm)
+
+
+def split_tree(tree):
+    """-> (values_tree, axes_tree)."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_pm)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_pm)
+    return values, axes
+
+
+class Initializer:
+    """Creates parameter leaves; abstract mode emits ShapeDtypeStructs only
+    (used by the dry-run so no host memory is ever allocated)."""
+
+    def __init__(self, seed: int = 0, abstract: bool = False,
+                 dtype=jnp.float32):
+        self.abstract = abstract
+        self.dtype = dtype
+        self._rng = np.random.default_rng(seed)
+
+    def normal(self, shape, axes, scale: float = 0.02) -> Pm:
+        if self.abstract:
+            return Pm(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        arr = (self._rng.standard_normal(shape) * scale).astype(np.float32)
+        return Pm(jnp.asarray(arr, dtype=self.dtype), tuple(axes))
+
+    def zeros(self, shape, axes) -> Pm:
+        if self.abstract:
+            return Pm(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        return Pm(jnp.zeros(shape, dtype=self.dtype), tuple(axes))
+
+    def ones(self, shape, axes) -> Pm:
+        if self.abstract:
+            return Pm(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        return Pm(jnp.ones(shape, dtype=self.dtype), tuple(axes))
+
+    def constant(self, value: np.ndarray, axes) -> Pm:
+        if self.abstract:
+            return Pm(jax.ShapeDtypeStruct(tuple(value.shape), self.dtype), tuple(axes))
+        return Pm(jnp.asarray(value, dtype=self.dtype), tuple(axes))
+
+
+def stack_block_params(block_list):
+    """Stack per-block param trees along a new leading 'layers' axis."""
+    def _stack(*leaves):
+        vals = [l.value for l in leaves]
+        axes = ("layers",) + leaves[0].axes
+        if isinstance(vals[0], jax.ShapeDtypeStruct):
+            shape = (len(vals),) + tuple(vals[0].shape)
+            return Pm(jax.ShapeDtypeStruct(shape, vals[0].dtype), axes)
+        return Pm(jnp.stack(vals), axes)
+
+    return jax.tree_util.tree_map(_stack, *block_list, is_leaf=is_pm)
+
+
+def abstract_like_block(block, n: int):
+    """Add a leading 'layers' dim of size n to an abstract block tree."""
+    def _lift(p: Pm) -> Pm:
+        shape = (n,) + tuple(p.value.shape)
+        return Pm(jax.ShapeDtypeStruct(shape, p.value.dtype), ("layers",) + p.axes)
+
+    return jax.tree_util.tree_map(_lift, block, is_leaf=is_pm)

@@ -1,0 +1,127 @@
+"""Input construction for every (arch × shape × mode) cell.
+
+``make_inputs`` returns the exact pytree each step function consumes — as
+``jax.ShapeDtypeStruct`` stand-ins (dry-run: no allocation) or concrete
+arrays (smoke tests).  Modality frontends are stubs per the assignment:
+audio/vision entries receive precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.layers import COMPUTE_DTYPE
+from repro.models.transformer import init_cache
+
+
+def _arr(shape, dtype, abstract: bool, rng: Optional[np.random.Generator],
+         kind: str = "normal", maxval: int = 2):
+    if abstract:
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    if kind == "tokens":
+        return jnp.asarray(rng.integers(0, maxval, size=shape), dtype=dtype)
+    if kind == "ones":
+        return jnp.ones(shape, dtype)
+    if kind == "positions":
+        s = shape[-1]
+        base = np.broadcast_to(np.arange(s, dtype=np.int32), shape)
+        return jnp.asarray(base, dtype=dtype)
+    return jnp.asarray(rng.standard_normal(shape) * 0.02, dtype=dtype)
+
+
+def vision_split(cfg: ModelConfig, seq: int) -> Tuple[int, int]:
+    """(S_vis, S_text) for VLM shapes."""
+    s_vis = int(seq * cfg.vision_prefix_frac)
+    s_vis = min(max(s_vis, 0), seq - 8)
+    return s_vis, seq - s_vis
+
+
+def make_inputs(
+    cfg: ModelConfig,
+    kind: str,  # train | prefill | decode
+    seq: int,
+    batch: int,
+    abstract: bool = True,
+    seed: int = 0,
+) -> Dict[str, Any]:
+    """Returns a dict with the step inputs:
+       train:   {"batch": {...}}
+       prefill: {"batch": {...}, "max_len": int}
+       decode:  {"tokens", "pos", "caches"}"""
+    rng = None if abstract else np.random.default_rng(seed)
+    v = cfg.vocab_size
+
+    if cfg.encoder_decoder:
+        dec = min(cfg.dec_seq, max(seq // 8, 16))
+        if kind == "train":
+            b = {
+                "frames": _arr((batch, seq, cfg.d_model), COMPUTE_DTYPE, abstract, rng),
+                "tokens": _arr((batch, dec + 1), jnp.int32, abstract, rng, "tokens", v),
+                "mask": _arr((batch, dec), jnp.float32, abstract, rng, "ones"),
+            }
+            return {"batch": b}
+        if kind == "prefill":
+            b = {
+                "frames": _arr((batch, seq, cfg.d_model), COMPUTE_DTYPE, abstract, rng),
+                "tokens": _arr((batch, dec), jnp.int32, abstract, rng, "tokens", v),
+            }
+            return {"batch": b, "max_len": dec}
+        caches = init_cache(cfg, batch, max_len=dec, enc_len=seq, abstract=abstract)
+        return {
+            "tokens": _arr((batch, 1), jnp.int32, abstract, rng, "tokens", v),
+            "pos": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                    else jnp.asarray(dec - 1, jnp.int32)),
+            "caches": caches,
+        }
+
+    if cfg.family == "vlm":
+        s_vis, s_text = vision_split(cfg, seq)
+        if kind in ("train", "prefill"):
+            b = {
+                "tokens": _arr((batch, s_text + (1 if kind == "train" else 0)),
+                               jnp.int32, abstract, rng, "tokens", v),
+                "patch_embeds": _arr((batch, s_vis, cfg.d_model), COMPUTE_DTYPE,
+                                     abstract, rng),
+                "positions": _arr((3, batch, seq), jnp.int32, abstract, rng,
+                                  "positions"),
+            }
+            if kind == "train":
+                b["mask"] = _arr((batch, s_text), jnp.float32, abstract, rng,
+                                 "ones")
+                return {"batch": b}
+            return {"batch": b, "max_len": seq}
+        caches = init_cache(cfg, batch, max_len=seq, abstract=abstract)
+        return {
+            "tokens": _arr((batch, 1), jnp.int32, abstract, rng, "tokens", v),
+            "pos": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                    else jnp.asarray(seq - 1, jnp.int32)),
+            "caches": caches,
+        }
+
+    # ---- plain LM families (dense / moe / ssm / hybrid) ----
+    if kind == "train":
+        b = {
+            "tokens": _arr((batch, seq + 1), jnp.int32, abstract, rng, "tokens", v),
+            "mask": _arr((batch, seq), jnp.float32, abstract, rng, "ones"),
+        }
+        return {"batch": b}
+    if kind == "prefill":
+        b = {"tokens": _arr((batch, seq), jnp.int32, abstract, rng, "tokens", v)}
+        return {"batch": b, "max_len": seq}
+    caches = init_cache(cfg, batch, max_len=seq, abstract=abstract)
+    return {
+        "tokens": _arr((batch, 1), jnp.int32, abstract, rng, "tokens", v),
+        "pos": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                else jnp.asarray(seq - 1, jnp.int32)),
+        "caches": caches,
+    }
+
+
+def make_inputs_for_shape(cfg: ModelConfig, shape: ShapeSpec,
+                          abstract: bool = True, seed: int = 0):
+    return make_inputs(cfg, shape.kind, shape.seq_len, shape.global_batch,
+                       abstract=abstract, seed=seed)

@@ -1,0 +1,15 @@
+from repro.profiling.bo import BOConfig, BOResult, Observation, run_bo, run_random_search
+from repro.profiling.gp import GaussianProcess
+from repro.profiling.pareto import (
+    ParetoPoint,
+    dominates,
+    frontier_from_profiles,
+    pareto_frontier,
+    profile_latency,
+)
+
+__all__ = [
+    "BOConfig", "BOResult", "Observation", "run_bo", "run_random_search",
+    "GaussianProcess", "ParetoPoint", "dominates", "frontier_from_profiles",
+    "pareto_frontier", "profile_latency",
+]

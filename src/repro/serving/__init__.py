@@ -1,0 +1,17 @@
+from repro.serving.network import GBPS, BandwidthTrace, GoodputEstimator
+from repro.serving.request import Request, WorkloadMix, kv_bytes_for
+from repro.serving.simulator import (
+    KVServePolicy,
+    NoCompressionPolicy,
+    Policy,
+    SimConfig,
+    SimResult,
+    Simulator,
+    StaticPolicy,
+)
+
+__all__ = [
+    "GBPS", "BandwidthTrace", "GoodputEstimator", "Request", "WorkloadMix",
+    "kv_bytes_for", "KVServePolicy", "NoCompressionPolicy", "Policy",
+    "SimConfig", "SimResult", "Simulator", "StaticPolicy",
+]

@@ -1,0 +1,88 @@
+"""Network model: time-varying effective bandwidth + the controller's
+goodput estimator.
+
+The realized communication cost is governed by effective goodput under
+contention, not nominal link speed (Sec. 3.1) — traces are piecewise
+constant with optional per-transfer jitter; the estimator only sees
+observed transfers (EWMA), which creates the offline→online drift the
+bandit corrects.
+"""
+from __future__ import annotations
+
+from bisect import bisect_right
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+GBPS = 1e9 / 8  # 1 Gbps in bytes/s
+
+
+@dataclass
+class BandwidthTrace:
+    """Piecewise-constant B(t) in bytes/s."""
+
+    times: List[float]   # segment start times, times[0] == 0
+    values: List[float]  # bytes/s per segment
+    jitter: float = 0.0  # multiplicative lognormal sigma per transfer
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.times[0] == 0.0 and len(self.times) == len(self.values)
+        self._rng = np.random.default_rng(self.seed)
+
+    @staticmethod
+    def constant(bandwidth: float) -> "BandwidthTrace":
+        return BandwidthTrace([0.0], [bandwidth])
+
+    @staticmethod
+    def steps(segments: Sequence[Tuple[float, float]],
+              jitter: float = 0.0, seed: int = 0) -> "BandwidthTrace":
+        ts, vs = zip(*segments)
+        return BandwidthTrace(list(ts), list(vs), jitter=jitter, seed=seed)
+
+    def at(self, t: float) -> float:
+        i = bisect_right(self.times, t) - 1
+        return self.values[max(i, 0)]
+
+    def transfer_time(self, start: float, nbytes: float) -> float:
+        """Time to push nbytes starting at `start`, integrating over the
+        trace (with optional per-transfer jitter)."""
+        if nbytes <= 0:
+            return 0.0
+        mult = 1.0
+        if self.jitter > 0:
+            mult = float(np.exp(self._rng.normal(0.0, self.jitter)))
+        remaining = nbytes
+        t = start
+        i = bisect_right(self.times, t) - 1
+        while True:
+            rate = self.values[max(i, 0)] * mult
+            seg_end = self.times[i + 1] if i + 1 < len(self.times) else float("inf")
+            dt_seg = seg_end - t
+            can = rate * dt_seg
+            if can >= remaining or seg_end == float("inf"):
+                return (t + remaining / rate) - start
+            remaining -= can
+            t = seg_end
+            i += 1
+
+
+@dataclass
+class GoodputEstimator:
+    """EWMA over observed transfer goodputs — the controller's view of B."""
+
+    alpha: float = 0.3
+    initial: float = 10 * GBPS
+    _est: Optional[float] = None
+
+    def observe(self, nbytes: float, seconds: float) -> None:
+        if seconds <= 0 or nbytes <= 0:
+            return
+        goodput = nbytes / seconds
+        self._est = goodput if self._est is None else \
+            (1 - self.alpha) * self._est + self.alpha * goodput
+
+    @property
+    def estimate(self) -> float:
+        return self._est if self._est is not None else self.initial

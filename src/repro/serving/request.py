@@ -1,0 +1,79 @@
+"""Request / session model for the disaggregated serving runtime."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.data.synthetic import WORKLOADS
+
+
+@dataclass
+class Request:
+    rid: int
+    workload: str            # router-provided label w (Sec. 2.2)
+    arrival: float           # seconds
+    ctx_tokens: int          # prompt length
+    out_tokens: int          # decode length
+    kv_bytes: float          # uncompressed KV payload V
+    t_slo: float = 0.0       # 0 = no SLO
+    q_min: float = 0.97
+    prefix_hit: bool = False  # pool scenario: reusable KV exists remotely
+
+    # ---- outcome fields (filled by the simulator) ----
+    done: float = 0.0
+    ttft: float = 0.0
+    breakdown: Dict[str, float] = field(default_factory=dict)
+    chosen: str = ""
+    slo_violated: bool = False
+    retries: int = 0
+
+    @property
+    def jct(self) -> float:
+        return self.done - self.arrival
+
+
+def kv_bytes_for(ctx_tokens: int, num_layers: int, kv_heads: int,
+                 head_dim: int, bytes_per_el: int = 2) -> float:
+    return 2.0 * num_layers * kv_heads * head_dim * ctx_tokens * bytes_per_el
+
+
+@dataclass
+class WorkloadMix:
+    """Poisson arrivals over a workload mix."""
+
+    rate: float = 4.0                      # requests/s
+    mix: Optional[Dict[str, float]] = None
+    ctx_scale: float = 1.0
+    seed: int = 0
+    model_layers: int = 32
+    model_kv_heads: int = 8
+    model_head_dim: int = 128
+    slo: float = 0.0
+    q_min: float = 0.97
+    prefix_hit_rate: float = 0.0
+
+    def generate(self, n: int):
+        rng = np.random.default_rng(self.seed)
+        mix = self.mix or {w: 1.0 for w in WORKLOADS}
+        names = list(mix)
+        probs = np.asarray([mix[w] for w in names], dtype=float)
+        probs /= probs.sum()
+        t = 0.0
+        out = []
+        for i in range(n):
+            t += rng.exponential(1.0 / self.rate)
+            w = names[int(rng.choice(len(names), p=probs))]
+            spec = WORKLOADS[w]
+            ctx = int(max(64, rng.lognormal(
+                np.log(spec.ctx_scale * self.ctx_scale * 16), 0.4)))
+            gen = int(max(4, rng.poisson(spec.out_scale * 4)))
+            out.append(Request(
+                rid=i, workload=w, arrival=t, ctx_tokens=ctx, out_tokens=gen,
+                kv_bytes=kv_bytes_for(ctx, self.model_layers,
+                                      self.model_kv_heads, self.model_head_dim),
+                t_slo=self.slo, q_min=self.q_min,
+                prefix_hit=bool(rng.random() < self.prefix_hit_rate),
+            ))
+        return out

@@ -1,0 +1,332 @@
+"""Event-driven simulator for disaggregated serving.
+
+Two scenarios (Sec. 7.2):
+  - "pd":   prefill cluster -> [compress -> transfer -> decompress] -> decode
+            cluster; metric = JCT.
+  - "pool": decode node fetches reusable KV from a remote pool (prefix
+            caching) or recomputes prefill locally; metric = TTFT.
+
+Fault model (large-scale runnability): persistent stragglers (per-node speed
+factors), transient slowdowns, node failures with re-queue + retry, and
+hedged pool fetches (duplicate read to a replica when the first read
+exceeds its deadline estimate).
+
+The policy object decides the compression profile per request from the
+*estimated* goodput (EWMA over observed transfers), reproducing the
+offline→online drift the residual bandit corrects.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.controller import Decision, ServiceAwareController, ServiceContext
+from repro.controller.latency_model import predicted_latency
+from repro.core.profiles import IDENTITY_PROFILE, Profile
+from repro.serving.network import BandwidthTrace, GoodputEstimator
+from repro.serving.request import Request
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+class Policy:
+    name = "base"
+
+    def choose(self, req: Request, ctx: ServiceContext) -> Tuple[Profile, Optional[Decision]]:
+        raise NotImplementedError
+
+    def feedback(self, ctx: ServiceContext, decision: Optional[Decision],
+                 observed: float) -> None:
+        pass
+
+
+class NoCompressionPolicy(Policy):
+    name = "default"
+
+    def choose(self, req, ctx):
+        return IDENTITY_PROFILE, None
+
+
+class StaticPolicy(Policy):
+    """A fixed profile regardless of service state (CacheGen/KIVI/Duo...)."""
+
+    def __init__(self, profile: Profile, name: str,
+                 slo_fallback_recompute: bool = False):
+        self.profile = profile
+        self.name = name
+        # CacheGen's behaviour in Fig. 14: fall back to recomputation when
+        # it cannot meet the target SLO.
+        self.slo_fallback_recompute = slo_fallback_recompute
+
+    def choose(self, req, ctx):
+        return self.profile, None
+
+
+class KVServePolicy(Policy):
+    name = "kvserve"
+
+    def __init__(self, controller: ServiceAwareController):
+        self.controller = controller
+
+    def choose(self, req, ctx):
+        decision = self.controller.select(ctx)
+        return decision.profile, decision
+
+    def feedback(self, ctx, decision, observed):
+        if decision is not None:
+            self.controller.observe(ctx, decision, observed)
+
+
+# ---------------------------------------------------------------------------
+# Cluster / fault model
+# ---------------------------------------------------------------------------
+@dataclass
+class NodePool:
+    n: int
+    speed: np.ndarray           # persistent per-node speed factor
+    free_at: List[Tuple[float, int]] = field(default_factory=list)
+
+    @staticmethod
+    def make(n: int, straggler_sigma: float, rng: np.random.Generator
+             ) -> "NodePool":
+        speed = np.exp(rng.normal(0.0, straggler_sigma, size=n))
+        speed = np.minimum(speed, 1.0)  # stragglers only slow down
+        pool = NodePool(n=n, speed=speed)
+        pool.free_at = [(0.0, i) for i in range(n)]
+        heapq.heapify(pool.free_at)
+        return pool
+
+    def acquire(self, now: float) -> Tuple[float, int]:
+        free, nid = heapq.heappop(self.free_at)
+        return max(free, now), nid
+
+    def release(self, nid: int, until: float) -> None:
+        heapq.heappush(self.free_at, (until, nid))
+
+
+@dataclass
+class SimConfig:
+    scenario: str = "pd"            # pd | pool
+    n_prefill: int = 4
+    n_decode: int = 2
+    prefill_tok_s: float = 20000.0  # tokens/s per prefill node
+    decode_tok_s: float = 120.0     # tokens/s per decode node
+    straggler_sigma: float = 0.0
+    transient_slow_p: float = 0.0   # per-task transient slowdown prob
+    transient_slow_factor: float = 3.0
+    fail_rate: float = 0.0          # failures per node-second of busy time
+    max_retries: int = 2
+    hedge_factor: float = 0.0       # >0: hedged pool fetch at factor×estimate
+    pool_fetch_overhead: float = 0.002
+    estimator_alpha: float = 0.3
+    seed: int = 0
+
+
+@dataclass
+class SimResult:
+    requests: List[Request]
+    policy: str
+
+    def jct(self) -> np.ndarray:
+        return np.asarray([r.jct for r in self.requests])
+
+    def ttft(self) -> np.ndarray:
+        return np.asarray([r.ttft for r in self.requests])
+
+    def mean_jct(self) -> float:
+        return float(self.jct().mean())
+
+    def p95_jct(self) -> float:
+        return float(np.percentile(self.jct(), 95))
+
+    def mean_ttft(self) -> float:
+        return float(self.ttft().mean())
+
+    def slo_attainment(self) -> float:
+        with_slo = [r for r in self.requests if r.t_slo > 0]
+        if not with_slo:
+            return 1.0
+        return float(np.mean([not r.slo_violated for r in with_slo]))
+
+    def breakdown(self) -> Dict[str, float]:
+        keys = ("prefill", "compress", "comm", "decompress", "decode",
+                "queue", "retry")
+        out = {k: 0.0 for k in keys}
+        for r in self.requests:
+            for k in keys:
+                out[k] += r.breakdown.get(k, 0.0)
+        n = max(len(self.requests), 1)
+        return {k: v / n for k, v in out.items()}
+
+
+class Simulator:
+    def __init__(self, config: SimConfig, policy: Policy,
+                 trace: BandwidthTrace, requests: Sequence[Request]):
+        self.cfg = config
+        self.policy = policy
+        self.trace = trace
+        self.requests = list(requests)
+        self.rng = np.random.default_rng(config.seed)
+        self.estimator = GoodputEstimator(alpha=config.estimator_alpha,
+                                          initial=trace.at(0.0))
+        self.prefill = NodePool.make(config.n_prefill,
+                                     config.straggler_sigma, self.rng)
+        self.decode = NodePool.make(config.n_decode, config.straggler_sigma,
+                                    self.rng)
+
+    # ------------------------------------------------------------------
+    def _task_time(self, base: float, pool: NodePool, nid: int) -> float:
+        t = base / pool.speed[nid]
+        if self.cfg.transient_slow_p > 0 and \
+                self.rng.random() < self.cfg.transient_slow_p:
+            t *= self.cfg.transient_slow_factor
+        return t
+
+    def _maybe_fail(self, duration: float) -> Optional[float]:
+        """Returns time-until-failure if the node dies mid-task."""
+        if self.cfg.fail_rate <= 0:
+            return None
+        u = self.rng.random()
+        p_fail = 1.0 - math.exp(-self.cfg.fail_rate * duration)
+        if u < p_fail:
+            return float(self.rng.uniform(0.1, 0.9)) * duration
+        return None
+
+    def _run_on_pool(self, pool: NodePool, now: float, base_time: float,
+                     req: Request) -> Tuple[float, float]:
+        """Execute a compute task with failure/straggler handling.
+        Returns (finish_time, queue_wait)."""
+        attempts = 0
+        t = now
+        queue_wait = 0.0
+        while True:
+            start, nid = pool.acquire(t)
+            queue_wait += start - t
+            dur = self._task_time(base_time, pool, nid)
+            fail_at = self._maybe_fail(dur) if attempts < self.cfg.max_retries \
+                else None
+            if fail_at is None:
+                pool.release(nid, start + dur)
+                return start + dur, queue_wait
+            # node died mid-task: lose partial work, re-queue elsewhere
+            pool.release(nid, start + fail_at + 1.0)  # node recovers later
+            req.retries += 1
+            req.breakdown["retry"] = req.breakdown.get("retry", 0.0) + fail_at
+            attempts += 1
+            t = start + fail_at
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        for req in self.requests:
+            if self.cfg.scenario == "pd":
+                self._run_pd(req)
+            else:
+                self._run_pool(req)
+        return SimResult(self.requests, self.policy.name)
+
+    # ------------------------------------------------------------------
+    def _service_context(self, req: Request, t_model: float) -> ServiceContext:
+        return ServiceContext(
+            workload=req.workload, bandwidth=self.estimator.estimate,
+            t_slo=req.t_slo, q_min=req.q_min, t_model=t_model,
+            kv_bytes=req.kv_bytes)
+
+    def _transfer(self, start: float, nbytes: float) -> float:
+        dt = self.trace.transfer_time(start, nbytes)
+        self.estimator.observe(nbytes, dt)
+        return dt
+
+    # ------------------------------------------------------------------
+    def _run_pd(self, req: Request) -> None:
+        cfg = self.cfg
+        t_prefill_base = req.ctx_tokens / cfg.prefill_tok_s
+        t_decode_base = req.out_tokens / cfg.decode_tok_s
+        ctx = self._service_context(req, t_prefill_base + t_decode_base)
+        profile, decision = self.policy.choose(req, ctx)
+        req.chosen = profile.strategy.short_name()
+
+        # prefill
+        t, q_wait = self._run_on_pool(self.prefill, req.arrival,
+                                      t_prefill_base, req)
+        req.breakdown["prefill"] = t - req.arrival - q_wait \
+            - req.breakdown.get("retry", 0.0)
+        req.breakdown["queue"] = q_wait
+
+        # compress -> transfer -> decompress
+        v = req.kv_bytes
+        t_c = 0.0 if profile.s_enc == float("inf") else v / profile.s_enc
+        payload = v / profile.cr
+        t_comm = self._transfer(t + t_c, payload)
+        t_d = 0.0 if profile.s_dec == float("inf") else v / profile.s_dec
+        req.breakdown["compress"] = t_c
+        req.breakdown["comm"] = t_comm
+        req.breakdown["decompress"] = t_d
+        t = t + t_c + t_comm + t_d
+        req.ttft = t - req.arrival  # first decode token comes right after
+
+        # decode
+        t, q_wait2 = self._run_on_pool(self.decode, t, t_decode_base, req)
+        req.breakdown["decode"] = t_decode_base
+        req.breakdown["queue"] += q_wait2
+        req.done = t
+        kv_latency = (req.breakdown["compress"] + req.breakdown["comm"]
+                      + req.breakdown["decompress"])
+        req.slo_violated = req.t_slo > 0 and req.jct > req.t_slo
+        self.policy.feedback(ctx, decision, kv_latency + ctx.t_model)
+
+    # ------------------------------------------------------------------
+    def _run_pool(self, req: Request) -> None:
+        """Prefix-caching: fetch compressed KV from the remote pool or
+        recompute prefill.  TTFT is the metric."""
+        cfg = self.cfg
+        t_prefill_base = req.ctx_tokens / cfg.prefill_tok_s
+        ctx = self._service_context(req, cfg.pool_fetch_overhead)
+        profile, decision = self.policy.choose(req, ctx)
+        req.chosen = profile.strategy.short_name()
+
+        recompute = not req.prefix_hit
+        if not recompute and isinstance(self.policy, StaticPolicy) \
+                and self.policy.slo_fallback_recompute and req.t_slo > 0:
+            # CacheGen-style: if the static profile cannot meet SLO, degrade
+            # to full recomputation (Fig. 14).
+            pred = predicted_latency(profile, ctx)
+            if pred > req.t_slo:
+                recompute = True
+
+        if recompute:
+            t, q_wait = self._run_on_pool(self.prefill, req.arrival,
+                                          t_prefill_base, req)
+            req.breakdown["prefill"] = t - req.arrival - q_wait \
+                - req.breakdown.get("retry", 0.0)
+            req.breakdown["queue"] = q_wait
+            req.ttft = t - req.arrival
+            req.done = t
+            req.slo_violated = req.t_slo > 0 and req.ttft > req.t_slo
+            self.policy.feedback(ctx, decision, req.ttft)
+            return
+
+        # fetch compressed KV from the pool (with optional hedging)
+        v = req.kv_bytes
+        payload = v / profile.cr
+        t0 = req.arrival + cfg.pool_fetch_overhead
+        t_comm = self._transfer(t0, payload)
+        if cfg.hedge_factor > 0:
+            expected = payload / self.estimator.estimate
+            if t_comm > cfg.hedge_factor * expected:
+                # hedged duplicate fetch from a replica
+                t_comm2 = cfg.pool_fetch_overhead + self._transfer(
+                    t0 + cfg.hedge_factor * expected, payload)
+                t_comm = min(t_comm, cfg.hedge_factor * expected + t_comm2)
+                req.retries += 1
+        t_d = 0.0 if profile.s_dec == float("inf") else v / profile.s_dec
+        req.breakdown["comm"] = t_comm
+        req.breakdown["decompress"] = t_d
+        req.ttft = cfg.pool_fetch_overhead + t_comm + t_d
+        req.done = req.arrival + req.ttft
+        req.slo_violated = req.t_slo > 0 and req.ttft > req.t_slo
+        self.policy.feedback(ctx, decision, req.ttft)

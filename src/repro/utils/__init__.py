@@ -1,0 +1,4 @@
+from repro.utils.timing import Timer, timed
+from repro.utils.trees import tree_bytes, tree_size
+
+__all__ = ["Timer", "timed", "tree_bytes", "tree_size"]

@@ -1,0 +1,59 @@
+"""Mesh-aware sharding constraints usable from model code.
+
+``shard_hint(x, spec_names)`` applies ``with_sharding_constraint`` when (a)
+tracing under an ambient mesh, (b) the named axes exist, and (c) each dim is
+divisible by its axes — otherwise it is the identity, so model code stays
+runnable on a single CPU device and under any mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+AxisName = Union[None, str, Tuple[str, ...]]
+
+
+def _current_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    try:  # `with mesh:` context manager path
+        import jax._src.mesh as mesh_lib
+        pm = mesh_lib.thread_resources.env.physical_mesh
+        if pm is not None and pm.axis_names:
+            return pm.abstract_mesh
+    except Exception:
+        pass
+    return None
+
+
+def shard_hint(x, *axes: AxisName):
+    """Constrain ``x`` to PartitionSpec(*axes) if valid under the ambient
+    mesh; no-op otherwise.  len(axes) must equal x.ndim."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    out = []
+    used = set()
+    for dim, name in zip(x.shape, axes):
+        cand = (name,) if isinstance(name, str) else (name or ())
+        cand = tuple(a for a in cand if a in sizes and a not in used)
+        if not cand:
+            out.append(None)
+            continue
+        prod = int(np.prod([sizes[a] for a in cand]))
+        if prod > 1 and dim % prod == 0:
+            out.append(cand if len(cand) > 1 else cand[0])
+            used.update(cand)
+        else:
+            out.append(None)
+    if all(o is None for o in out):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*out))

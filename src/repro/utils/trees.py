@@ -1,0 +1,19 @@
+"""Pytree helpers."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all leaves (respects dtype itemsize)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        itemsize = np.dtype(x.dtype).itemsize
+        total += int(np.prod(x.shape)) * itemsize
+    return total

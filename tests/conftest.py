@@ -1,0 +1,43 @@
+import os
+import sys
+
+# Tests see the real single CPU device; only launch/dryrun.py forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def kv_sample():
+    from repro.core import KVCache
+    return KVCache.random(num_layers=4, kv_heads=4, seq=160, head_dim=64, seed=0)
+
+
+@pytest.fixture(scope="session")
+def reference_model():
+    """Session-cached tiny reference LM (trains on first ever use)."""
+    from repro.core.quality import get_reference_model
+    return get_reference_model()
+
+
+@pytest.fixture(scope="session")
+def synthetic_profiles():
+    """A spread of plausible profiles for controller tests (no model runs)."""
+    from repro.core.profiles import Profile
+    from repro.core.strategy import StrategyConfig
+    rng = np.random.default_rng(7)
+    out = []
+    for i in range(24):
+        cr = float(rng.uniform(1.5, 9.0))
+        s = float(rng.uniform(2e8, 2e10))
+        q = {w: float(np.clip(1.02 - 0.006 * cr**1.5 + rng.normal(0, 0.01),
+                              0, 1.0))
+             for w in ("mathlike", "codelike", "qalike", "summlike")}
+        out.append(Profile(
+            StrategyConfig(key_bits=2 + (i % 7), value_bits=2 + ((i + 3) % 7),
+                           group_size=(32, 64, 128)[i % 3]),
+            cr=cr, s_enc=2 * s, s_dec=2 * s, quality=q))
+    return out

@@ -1,0 +1,82 @@
+"""Residual-corrected bandit: drift correction, guardrails, cooldown."""
+import numpy as np
+import pytest
+
+from repro.controller import BanditConfig, ResidualBandit, ServiceContext
+from repro.controller.latency_model import predicted_latency
+from repro.core.profiles import IDENTITY_PROFILE, Profile
+from repro.core.strategy import StrategyConfig
+
+
+def _profile(cr, s, bits=4):
+    return Profile(StrategyConfig(key_bits=bits, value_bits=bits), cr=cr,
+                   s_enc=2 * s, s_dec=2 * s)
+
+
+def _ctx(bandwidth=1e9, slo=0.0, v=1e8):
+    return ServiceContext("qalike", bandwidth, slo, 0.9, t_model=0.0,
+                          kv_bytes=v)
+
+
+def test_residual_ewma_converges():
+    bandit = ResidualBandit(BanditConfig(alpha=0.3, epsilon=0.0))
+    p = _profile(4.0, 1e9)
+    ctx = _ctx()
+    true_extra = 0.05  # constant unmodelled overhead
+    for _ in range(60):
+        t_obs = predicted_latency(p, ctx) + true_extra
+        bandit.update(0, p, ctx, t_obs)
+    assert abs(bandit.residual_of(0, p) - true_extra) < 0.005
+
+
+def test_bandit_corrects_model_mispredictions():
+    """Model prefers p_fast, but runtime drift makes p_slow better; the
+    bandit must flip after observing residuals."""
+    cfg = BanditConfig(alpha=0.4, epsilon=0.0, seed=0)
+    bandit = ResidualBandit(cfg)
+    p_model_best = _profile(8.0, 1e10, bits=2)   # looks fastest on paper
+    p_actual_best = _profile(4.0, 1e10, bits=4)
+    ctx = _ctx(bandwidth=5e8)
+    cands = [p_model_best, p_actual_best]
+    assert bandit.select(0, cands, ctx) is p_model_best  # prior decision
+    for _ in range(30):
+        chosen = bandit.select(0, cands, ctx)
+        extra = 0.5 if chosen is p_model_best else 0.0  # hidden contention
+        bandit.update(0, chosen, ctx, predicted_latency(chosen, ctx) + extra)
+        # force one exploration of the alternative early on
+        bandit.update(0, p_actual_best, ctx,
+                      predicted_latency(p_actual_best, ctx))
+    assert bandit.select(0, cands, ctx) is p_actual_best
+
+
+def test_slo_feasibility_filter_prefers_feasible():
+    bandit = ResidualBandit(BanditConfig(epsilon=0.0))
+    slow = _profile(8.0, 1e6, bits=2)   # high CR but way too slow for SLO
+    ok = _profile(2.0, 1e11, bits=8)    # meets the SLO
+    ctx = _ctx(bandwidth=1e10, slo=0.05, v=1e9)
+    assert bandit.select(0, [slow, ok], ctx) is ok
+
+
+def test_empty_feasible_set_best_effort_fallback():
+    """Paper Sec 6.2: empty feasible set -> conservative *compression*
+    default (least-bad candidate), never raw KV."""
+    bandit = ResidualBandit(BanditConfig(epsilon=0.0))
+    slow = _profile(8.0, 1e6, bits=2)
+    slower = _profile(8.0, 1e5, bits=3)
+    ctx = _ctx(bandwidth=1e7, slo=0.001, v=1e9)
+    assert bandit.select(0, [slower, slow], ctx) is slow
+    # with no candidates at all, identity remains the final fallback
+    assert bandit.select(0, [], ctx) is IDENTITY_PROFILE
+
+
+def test_violation_cooldown_quarantines():
+    cfg = BanditConfig(epsilon=0.0, violation_k=3, violation_m=5,
+                       cooldown_steps=100)
+    bandit = ResidualBandit(cfg)
+    bad = _profile(6.0, 1e10, bits=2)
+    good = _profile(2.0, 1e10, bits=8)
+    ctx = _ctx(bandwidth=1e9, slo=0.3, v=1e8)
+    for _ in range(4):  # bad profile repeatedly blows the SLO
+        bandit.update(0, bad, ctx, observed_latency=1.0)
+    chosen = bandit.select(0, [bad, good], ctx)
+    assert chosen is good

@@ -1,0 +1,73 @@
+"""Service-Aware Online Controller: end-to-end selection behaviour."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.controller import ServiceAwareController, ServiceContext
+from repro.core.profiles import IDENTITY_PROFILE
+
+
+WORKLOADS = ("mathlike", "codelike", "qalike", "summlike")
+
+
+@pytest.fixture()
+def controller(synthetic_profiles):
+    return ServiceAwareController({w: synthetic_profiles for w in WORKLOADS})
+
+
+def _ctx(bandwidth, q_min=0.9, slo=0.0, v=1e8, w="qalike"):
+    return ServiceContext(w, bandwidth, slo, q_min, t_model=0.01, kv_bytes=v)
+
+
+def test_low_bandwidth_selects_compression(controller):
+    d = controller.select(_ctx(bandwidth=1e7))
+    assert d.profile.cr > 1.0
+
+
+def test_high_bandwidth_bypasses_compression(controller):
+    """Paper Sec 7.2: above the benefit threshold the controller must
+    converge to the uncompressed baseline, not degrade it."""
+    d = controller.select(_ctx(bandwidth=1e13))
+    assert d.profile.cr == 1.0
+
+
+def test_quality_budget_respected(controller, synthetic_profiles):
+    d = controller.select(_ctx(bandwidth=1e7, q_min=0.99))
+    assert d.profile.q("qalike") >= 0.97 or d.profile.cr == 1.0
+
+
+def test_decision_latency_under_1ms(controller):
+    ctx = _ctx(bandwidth=5e8)
+    controller.select(ctx)  # warm
+    t0 = time.perf_counter()
+    n = 200
+    for _ in range(n):
+        controller.select(ctx)
+    per_decision = (time.perf_counter() - t0) / n
+    assert per_decision < 1e-3, f"{per_decision*1e3:.3f} ms/decision"
+
+
+def test_feedback_changes_selection(synthetic_profiles):
+    c = ServiceAwareController({w: synthetic_profiles for w in WORKLOADS})
+    ctx = _ctx(bandwidth=3e8)
+    d0 = c.select(ctx)
+    if d0.profile.cr == 1.0:
+        pytest.skip("already at identity")
+    # report massive overruns for the chosen profile
+    for _ in range(20):
+        d = c.select(ctx)
+        penalty = 10.0 if d.profile.strategy.key() == d0.profile.strategy.key() else 0.0
+        c.observe(ctx, d, d.predicted + penalty)
+    dn = c.select(ctx)
+    assert dn.profile.strategy.key() != d0.profile.strategy.key()
+
+
+def test_workload_conditioning(synthetic_profiles):
+    """Different per-workload quality -> potentially different selections."""
+    profs = synthetic_profiles
+    c = ServiceAwareController({w: profs for w in WORKLOADS})
+    ds = {w: c.select(_ctx(bandwidth=2e8, w=w, q_min=0.95)) for w in WORKLOADS}
+    # all decisions valid for their own workload's bucket
+    for w, d in ds.items():
+        assert d.profile.cr == 1.0 or d.profile.q(w) >= 0.90

@@ -1,0 +1,81 @@
+"""Theorems 6.1 / 6.2: property tests against brute force."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.controller import (
+    bandwidth_threshold,
+    baseline_latency,
+    brute_force_optimal,
+    build_envelope,
+    normalized_latency,
+    predicted_latency,
+    ServiceContext,
+)
+from repro.core.profiles import IDENTITY_PROFILE, Profile
+from repro.core.strategy import StrategyConfig
+
+
+def _mk_profiles(seed, n):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        cr = float(rng.uniform(1.01, 12.0))
+        s = float(rng.uniform(1e7, 1e11))
+        out.append(Profile(StrategyConfig(key_bits=(i % 7) + 2,
+                                          group_size=(32, 64, 128)[i % 3],
+                                          delta_group=16 if i % 2 else 64),
+                           cr=cr, s_enc=2 * s, s_dec=2 * s))
+    return out
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 50),
+       logx=st.floats(-12, -6))
+def test_envelope_matches_brute_force(seed, n, logx):
+    """Theorem 6.2: lower-envelope lookup == O(n) argmin, for any B."""
+    profiles = _mk_profiles(seed, n)
+    env = build_envelope(profiles)
+    x = 10.0 ** logx
+    got = env.optimal(x)
+    want = brute_force_optimal(profiles, x)
+    assert abs(normalized_latency(got, x) - normalized_latency(want, x)) < 1e-15
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), logb=st.floats(6.5, 11.5))
+def test_bandwidth_threshold_theorem(seed, logb):
+    """Theorem 6.1: T_p < T_0  <=>  B < B*_p, independent of V."""
+    p = _mk_profiles(seed, 1)[0]
+    b = 10.0 ** logb
+    bstar = bandwidth_threshold(p)
+    for v in (1e6, 1e9):
+        ctx = ServiceContext("qalike", b, 0.0, 0.0, t_model=0.01, kv_bytes=v)
+        beneficial = predicted_latency(p, ctx) < baseline_latency(ctx)
+        if abs(b - bstar) / bstar > 1e-9:  # away from the knife edge
+            assert beneficial == (b < bstar)
+
+
+def test_envelope_includes_identity():
+    """At very high bandwidth the envelope must select no-compression."""
+    profiles = _mk_profiles(0, 20)
+    env = build_envelope(profiles, include_identity=True)
+    p = env.optimal(1e-30)  # x -> 0 means B -> inf
+    assert p.cr == 1.0 and p.s_eff == float("inf")
+
+
+def test_candidates_are_neighbors():
+    profiles = _mk_profiles(1, 30)
+    env = build_envelope(profiles)
+    if len(env.lines) >= 3:
+        x = (env.breaks[0] + env.breaks[1]) / 2 if len(env.breaks) >= 2 \
+            else env.breaks[0] * 1.5
+        cands = env.candidates(x, n_neighbors=1)
+        assert 1 <= len(cands) <= 3
+        assert env.optimal(x) in cands
+
+
+def test_breaks_sorted():
+    env = build_envelope(_mk_profiles(5, 40))
+    assert all(env.breaks[i] < env.breaks[i + 1]
+               for i in range(len(env.breaks) - 1))

@@ -1,0 +1,89 @@
+"""Bayesian Profiling Engine: GP sanity, BO efficiency, ablations."""
+import numpy as np
+import pytest
+
+from repro.core.strategy import enumerate_space, estimate_cr
+from repro.profiling import BOConfig, GaussianProcess, run_bo, run_random_search
+
+
+def test_gp_fits_smooth_function():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-2, 2, size=(40, 2))
+    y = np.sin(x[:, 0]) + 0.5 * x[:, 1]
+    gp = GaussianProcess(length_scale=0.8).fit(x, y)
+    xq = rng.uniform(-1.5, 1.5, size=(30, 2))
+    yq = np.sin(xq[:, 0]) + 0.5 * xq[:, 1]
+    mean, std = gp.predict(xq)
+    assert np.abs(mean - yq).mean() < 0.1
+    # interpolation points have low predictive std
+    m2, s2 = gp.predict(x[:5])
+    assert (s2 < 0.1).all()
+
+
+def test_gp_prob_greater_monotone():
+    gp = GaussianProcess().fit(np.array([[0.0], [1.0]]), np.array([0.0, 1.0]))
+    # query away from the observations so posterior std is non-trivial
+    p_low = gp.prob_greater(np.array([[2.5]]), 0.2)
+    p_high = gp.prob_greater(np.array([[2.5]]), 0.9)
+    assert p_low > p_high
+
+
+def _synthetic_eval(cfg):
+    """Monotone CR-Acc trade-off with structure in the config space."""
+    cr = estimate_cr(cfg)
+    penalty = 0.004 * cr**1.5
+    if cfg.transform == "hadamard":
+        penalty *= 0.8  # rotation genuinely helps
+    acc = max(0.0, 1.0 - penalty)
+    return acc, cr
+
+
+@pytest.fixture(scope="module")
+def space():
+    return enumerate_space("module")
+
+
+def test_bo_finds_global_optimum(space):
+    res = run_bo(space, _synthetic_eval,
+                 BOConfig(acc_threshold=0.95, max_iters=150, seed=1))
+    feasible = [(c, _synthetic_eval(c)) for c in space
+                if _synthetic_eval(c)[0] >= 0.95]
+    true_best = max(v[1] for _, v in feasible)
+    assert res.best is not None
+    assert res.best_cr() >= true_best - 1e-9
+    # sample efficiency: far fewer evals than the space size
+    assert res.evaluations < len(space) * 0.6
+
+
+def test_bo_beats_random_in_sample_efficiency(space):
+    budget = 25
+    bo = run_bo(space, _synthetic_eval,
+                BOConfig(acc_threshold=0.95, max_iters=budget, seed=3))
+    rnd = run_random_search(space, _synthetic_eval,
+                            BOConfig(acc_threshold=0.95, max_iters=budget,
+                                     seed=3))
+    assert bo.best_cr() >= rnd.best_cr()
+
+
+def test_pruning_reduces_evaluations(space):
+    full = run_bo(space, _synthetic_eval,
+                  BOConfig(acc_threshold=0.95, max_iters=400, seed=5))
+    no_prune = run_bo(space, _synthetic_eval,
+                      BOConfig(acc_threshold=0.95, max_iters=400, seed=5,
+                               use_pruning=False, use_early_stop=False))
+    assert full.evaluations <= no_prune.evaluations
+    # both still find the optimum
+    assert abs(full.best_cr() - no_prune.best_cr()) < 1e-6
+
+
+def test_feasible_set_respects_constraint(space):
+    res = run_bo(space, _synthetic_eval,
+                 BOConfig(acc_threshold=0.97, max_iters=60, seed=7))
+    assert all(o.acc >= 0.97 for o in res.feasible)
+
+
+def test_early_stop_on_exhaustion():
+    tiny = enumerate_space("pipeline")
+    res = run_bo(tiny, _synthetic_eval,
+                 BOConfig(acc_threshold=0.5, max_iters=10_000, seed=0))
+    assert res.evaluations <= len(tiny)

@@ -1,0 +1,57 @@
+"""Cost-model regressions for in-place update accounting (the §Perf
+hillclimb-1 fix): scan ys accumulation must NOT be charged full-buffer
+traffic per iteration."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_cost import analyze_hlo_text
+
+
+def test_scan_ys_not_charged_full_buffer():
+    """A scan emitting (D,)-slices into an (N, D) output should cost O(N*D)
+    bytes total, not O(N^2 * D)."""
+    n, d = 256, 512
+
+    def f(x):
+        def body(c, _):
+            c = jnp.tanh(c)
+            return c, c  # ys slice (d,)
+        _, ys = jax.lax.scan(body, x, None, length=n)
+        return ys
+
+    comp = jax.jit(f).lower(jax.ShapeDtypeStruct((d,), jnp.float32)).compile()
+    c = analyze_hlo_text(comp.as_text())
+    linear = n * d * 4
+    assert c.bytes < 20 * linear, (c.bytes, linear)  # O(N*D), not O(N^2*D)
+
+
+def test_standalone_dus_charged_update_size():
+    big, upd = 1 << 20, 128
+
+    def f(buf, u, i):
+        return jax.lax.dynamic_update_slice(buf, u, (i,))
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((big,), jnp.float32),
+        jax.ShapeDtypeStruct((upd,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    c = analyze_hlo_text(comp.as_text())
+    # XLA inserts ONE real full-buffer copy (entry param not donated);
+    # the DUS itself must only add update-region traffic on top — so the
+    # total sits near 2x buffer (copy r+w), nowhere near 4x (copy + full
+    # DUS charge).
+    assert c.bytes < big * 4 * 2.5, c.bytes
+    assert c.bytes > big * 4 * 1.5  # the genuine copy IS counted
+
+
+def test_dynamic_slice_charged_slice_size():
+    big, sl = 1 << 20, 256
+
+    def f(buf, i):
+        return jax.lax.dynamic_slice(buf, (i,), (sl,)) * 2.0
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((big,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    c = analyze_hlo_text(comp.as_text())
+    assert c.bytes < big, c.bytes

@@ -1,0 +1,47 @@
+"""3D Pareto frontier: dominance properties (hypothesis vs brute force)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.profiles import Profile
+from repro.core.strategy import StrategyConfig
+from repro.profiling import ParetoPoint, dominates, pareto_frontier
+
+
+def _points(seed, n):
+    rng = np.random.default_rng(seed)
+    pts = []
+    for i in range(n):
+        pts.append(ParetoPoint(
+            acc=float(rng.uniform(0.5, 1.0)),
+            cr=float(rng.uniform(1, 10)),
+            lat=float(rng.uniform(1e-10, 1e-8)),
+            profile=Profile(StrategyConfig(key_bits=(i % 7) + 2), cr=1.0,
+                            s_enc=1.0, s_dec=1.0),
+        ))
+    return pts
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 60))
+def test_frontier_is_exactly_nondominated(seed, n):
+    pts = _points(seed, n)
+    frontier = pareto_frontier(pts)
+    fs = set(id(p) for p in frontier)
+    for p in pts:
+        dominated = any(dominates(q, p) for q in pts if q is not p)
+        assert (id(p) in fs) == (not dominated)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_no_mutual_domination_on_frontier(seed):
+    frontier = pareto_frontier(_points(seed, 40))
+    for a in frontier:
+        for b in frontier:
+            if a is not b:
+                assert not dominates(a, b)
+
+
+def test_single_point():
+    pts = _points(0, 1)
+    assert pareto_frontier(pts) == pts

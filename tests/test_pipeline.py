@@ -1,0 +1,99 @@
+"""End-to-end pipeline: real byte roundtrips, CR accounting, baselines."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BASELINES,
+    CompressionPipeline,
+    IDENTITY_STRATEGY,
+    KVCache,
+    StrategyConfig,
+    measure_profile,
+)
+
+
+@pytest.mark.parametrize("name", sorted(BASELINES))
+def test_baseline_roundtrip(kv_sample, name):
+    pipe = CompressionPipeline(BASELINES[name])
+    restored, comp, t_enc, t_dec = pipe.roundtrip(kv_sample)
+    assert restored.shape == kv_sample.shape
+    assert comp.compression_ratio() > 1.0
+    assert np.isfinite(restored.k).all() and np.isfinite(restored.v).all()
+    assert t_enc > 0 and t_dec > 0
+
+
+def test_identity_near_exact(kv_sample):
+    pipe = CompressionPipeline(IDENTITY_STRATEGY)
+    restored, comp, _, _ = pipe.roundtrip(kv_sample)
+    # identity ships logical bf16 -> fp16 wire; error is rounding only
+    assert np.abs(restored.k - kv_sample.k).max() < 0.05
+    assert abs(comp.compression_ratio() - 1.0) < 0.05
+
+
+def test_kivi_metadata_ceiling(kv_sample):
+    """KIVI 2-bit g=32: payload 2b + (16+16)/32 metadata = 3 bits/elem ->
+    CR ceiling ~5.33x (paper Sec. 7.3)."""
+    comp = CompressionPipeline(BASELINES["kivi"]).compress(kv_sample)
+    assert 5.0 < comp.compression_ratio() < 5.4
+
+
+def test_cr_increases_with_fewer_bits(kv_sample):
+    crs = []
+    for bits in (8, 4, 2):
+        cfg = StrategyConfig(quantizer="uniform", key_bits=bits,
+                             value_bits=bits, granularity="per_head")
+        comp = CompressionPipeline(cfg).compress(kv_sample)
+        crs.append(comp.compression_ratio())
+    assert crs[0] < crs[1] < crs[2]
+
+
+def test_codec_stacking_improves_cr():
+    # smooth token stream -> delta+zstd should beat plain bitpack
+    t = np.linspace(0, 6, 256, dtype=np.float32)
+    base = np.sin(t)[None, None, :, None]
+    kv = KVCache(
+        np.broadcast_to(base, (3, 2, 256, 32)).copy() +
+        0.01 * np.random.default_rng(0).standard_normal((3, 2, 256, 32)).astype(np.float32),
+        np.broadcast_to(base, (3, 2, 256, 32)).copy())
+    plain = CompressionPipeline(StrategyConfig(
+        quantizer="uniform", key_bits=4, value_bits=4, codec="none"))
+    coded = CompressionPipeline(StrategyConfig(
+        transform="delta", quantizer="uniform", key_bits=4, value_bits=4,
+        codec="bitshuffle_zstd3"))
+    assert coded.compress(kv).total_bytes() < plain.compress(kv).total_bytes()
+
+
+def test_cross_method_recomposition(kv_sample):
+    """The paper's point: arbitrary T x Q x C combinations compose."""
+    cfg = StrategyConfig(transform="hadamard", quantizer="cachegen",
+                         tier_bits=(6, 4, 2), codec="zstd3")
+    restored, comp, _, _ = CompressionPipeline(cfg).roundtrip(kv_sample)
+    assert comp.compression_ratio() > 3.0
+    assert np.isfinite(restored.k).all()
+
+
+def test_hadamard_helps_outlier_channels():
+    rng = np.random.default_rng(3)
+    k = rng.standard_normal((4, 4, 128, 64)).astype(np.float32)
+    k[..., 5] *= 30.0  # outlier channel
+    kv = KVCache(k, rng.standard_normal(k.shape).astype(np.float32))
+    def mse(cfg):
+        r, _, _, _ = CompressionPipeline(cfg).roundtrip(kv)
+        return float(((r.k - kv.k) ** 2).mean())
+    plain = mse(StrategyConfig(quantizer="uniform", key_bits=3,
+                               value_bits=3, granularity="per_token",
+                               group_size=64))
+    rotated = mse(StrategyConfig(transform="hadamard", quantizer="uniform",
+                                 key_bits=3, value_bits=3,
+                                 granularity="per_token", group_size=64))
+    assert rotated < plain
+
+
+def test_measure_profile(kv_sample):
+    p = measure_profile(BASELINES["kivi"], [kv_sample])
+    assert p.cr > 4 and p.s_enc > 0 and p.s_dec > 0 and p.mse > 0
+    assert p.s_eff < min(p.s_enc, p.s_dec)
+    # json roundtrip
+    from repro.core.profiles import Profile
+    p2 = Profile.from_json(p.to_json())
+    assert p2.strategy == p.strategy and abs(p2.cr - p.cr) < 1e-9

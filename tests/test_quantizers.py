@@ -1,0 +1,143 @@
+"""Quantizer stage: error bounds, bucketing, metadata accounting."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizers import (
+    group_dequantize,
+    group_quantize,
+    head_importance_scores,
+    quantize_tensor,
+)
+from repro.core.strategy import StrategyConfig
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    grouping=st.sampled_from(["per_head", "per_channel", "per_token"]),
+    group_size=st.sampled_from([16, 32, 64]),
+    symmetric=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_group_quant_error_bound(bits, grouping, group_size, symmetric, seed):
+    """|dequant - x| <= scale/2 + eps per element (asym); 2x for symmetric
+    clamp of the most-negative code."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((6, 48, 32)) * 5).astype(np.float32)
+    codes, scale, zp = group_quantize(x, bits, grouping, group_size, symmetric)
+    out = group_dequantize(codes, scale, zp, bits, grouping, group_size,
+                           symmetric)
+    # reconstruct per-element scale bound
+    qmax = (1 << bits) - 1
+    if grouping == "per_head":
+        rng_per = (x.max(axis=(1, 2)) - x.min(axis=(1, 2)))[:, None, None]
+    else:
+        rng_per = np.full_like(x, np.ptp(x))
+    bound = rng_per / max(qmax, 1) * (1.0 if not symmetric else 2.0) + 1e-4
+    assert (np.abs(out - x) <= bound + 1e-5).all()
+
+
+def test_error_decreases_with_bits():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 64, 32)).astype(np.float32)
+    errs = []
+    for bits in (2, 4, 8):
+        c, s, z = group_quantize(x, bits, "per_channel", 32, False)
+        out = group_dequantize(c, s, z, bits, "per_channel", 32, False)
+        errs.append(np.abs(out - x).mean())
+    assert errs[0] > errs[1] > errs[2]
+
+
+def _x4(seed=0, L=4, H=4, S=96, D=32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((L, H, S, D)) * scale).astype(np.float32)
+
+
+def test_uniform_buckets_single():
+    x = _x4()
+    qt = quantize_tensor(x, StrategyConfig(quantizer="uniform", key_bits=4),
+                         is_key=True)
+    assert len(qt.buckets) == 1 and qt.buckets[0].bits == 4
+    assert qt.dequantize().shape == x.shape
+
+
+def test_cachegen_layer_tiers():
+    x = _x4(L=10)
+    cfg = StrategyConfig(quantizer="cachegen", tier_bits=(8, 4, 2),
+                         tier_fracs=(0.2, 0.3))
+    qt = quantize_tensor(x, cfg, is_key=True)
+    bits_seen = sorted(b.bits for b in qt.buckets)
+    assert bits_seen == [2, 4, 8]
+    # earlier layers must have MORE bits
+    layer_bits = {}
+    for b in qt.buckets:
+        for (l, h) in b.lh_index:
+            layer_bits[int(l)] = b.bits
+    assert layer_bits[0] >= layer_bits[5] >= layer_bits[9]
+
+
+def test_mixhq_head_allocation():
+    x = _x4(H=8)
+    # make heads 0,1 high-variance (retrieval-like) in every layer
+    x[:, :2] *= 10
+    cfg = StrategyConfig(quantizer="mixhq", mixhq_high_bits=8,
+                         mixhq_low_bits=2, retrieval_frac=0.25)
+    qt = quantize_tensor(x, cfg, is_key=True)
+    by_bits = {b.bits: b for b in qt.buckets}
+    assert set(by_bits) == {8, 2}
+    high_heads = set(map(tuple, by_bits[8].lh_index.tolist()))
+    assert all(h in (0, 1) for (_, h) in high_heads)
+    # retrieval heads reconstruct much better than streaming heads
+    out = qt.dequantize()
+    err_hi = np.abs(out[:, :2] - x[:, :2]).mean() / np.abs(x[:, :2]).mean()
+    err_lo = np.abs(out[:, 2:] - x[:, 2:]).mean() / np.abs(x[:, 2:]).mean()
+    assert err_hi < err_lo
+
+
+def test_mixhq_layer_pyramid_shaves_deep_layers():
+    x = _x4(L=9, H=4)
+    cfg = StrategyConfig(quantizer="mixhq", mixhq_high_bits=8,
+                         mixhq_low_bits=3, retrieval_frac=0.25,
+                         layer_pyramid=True)
+    qt = quantize_tensor(x, cfg, is_key=True)
+    assert any(b.bits == 2 for b in qt.buckets)  # 3-1 on deep streaming heads
+
+
+def test_mixhq_heavy_hitter_tokens():
+    x = _x4(S=64)
+    cfg = StrategyConfig(quantizer="mixhq", mixhq_high_bits=8,
+                         mixhq_low_bits=2, retrieval_frac=0.25,
+                         token_heavy_hitter_frac=0.1)
+    qt = quantize_tensor(x, cfg, is_key=True)
+    assert any(b.token_index is not None for b in qt.buckets)
+    assert qt.dequantize().shape == x.shape
+
+
+def test_duo_prunes_streaming_heads():
+    x = _x4(S=300)
+    cfg = StrategyConfig(quantizer="duo", retrieval_frac=0.25, duo_sink=4,
+                         duo_recent=64)
+    qt = quantize_tensor(x, cfg, is_key=True)
+    out = qt.dequantize()
+    # middle tokens of streaming heads are zeroed (pruned)...
+    stream_bucket = [b for b in qt.buckets if b.token_index is not None][0]
+    l, h = stream_bucket.lh_index[0]
+    assert np.abs(out[l, h, 100:200]).max() == 0.0
+    # ...while kept positions match exactly (fp16)
+    np.testing.assert_allclose(out[l, h, :4], x[l, h, :4], atol=2e-2,
+                               rtol=1e-2)
+
+
+def test_head_scores_shape():
+    x = _x4(L=3, H=5)
+    assert head_importance_scores(x).shape == (3, 5)
+
+
+def test_payload_and_meta_accounting():
+    x = _x4()
+    cfg = StrategyConfig(quantizer="kivi", key_bits=2, value_bits=2,
+                         group_size=32)
+    qt = quantize_tensor(x, cfg, is_key=True)
+    assert qt.payload_bits() == x.size * 2
+    assert qt.meta_bytes() > 0

@@ -1,0 +1,142 @@
+"""Serving simulator: PD + pool scenarios, adaptivity, fault tolerance."""
+import numpy as np
+import pytest
+
+from repro.controller import ServiceAwareController
+from repro.core.profiles import IDENTITY_PROFILE
+from repro.serving import (
+    GBPS,
+    BandwidthTrace,
+    KVServePolicy,
+    NoCompressionPolicy,
+    SimConfig,
+    Simulator,
+    StaticPolicy,
+    WorkloadMix,
+)
+
+WORKLOADS = ("mathlike", "codelike", "qalike", "summlike")
+
+
+def _requests(n=40, seed=0, slo=0.0, prefix=0.0, q_min=0.5):
+    # q_min=0.5 so every profile is quality-eligible: these tests compare
+    # latency policy, not quality budgets (statics ignore q_min entirely).
+    return WorkloadMix(rate=2.0, seed=seed, slo=slo, q_min=q_min,
+                       prefix_hit_rate=prefix).generate(n)
+
+
+def _static(profiles, i, name):
+    return StaticPolicy(profiles[i], name)
+
+
+def test_compression_helps_at_low_bandwidth(synthetic_profiles):
+    reqs = _requests()
+    trace = BandwidthTrace.constant(0.5 * GBPS)
+    base = Simulator(SimConfig(), NoCompressionPolicy(), trace,
+                     [r for r in _requests()]).run()
+    best = max(synthetic_profiles, key=lambda p: p.cr)
+    comp = Simulator(SimConfig(), StaticPolicy(best, "static"),
+                     trace, reqs).run()
+    assert comp.mean_jct() < base.mean_jct()
+
+
+def test_compression_hurts_at_high_bandwidth(synthetic_profiles):
+    """Negative optimization (Motivation 2): slow codec + fat pipe."""
+    slow = min(synthetic_profiles, key=lambda p: p.s_eff)
+    trace = BandwidthTrace.constant(500 * GBPS)
+    base = Simulator(SimConfig(), NoCompressionPolicy(), trace,
+                     _requests()).run()
+    comp = Simulator(SimConfig(), StaticPolicy(slow, "slow"), trace,
+                     _requests()).run()
+    assert comp.mean_jct() > base.mean_jct()
+
+
+def test_kvserve_tracks_best_static_across_bandwidths(synthetic_profiles):
+    """The controller should be at least close to the best static choice in
+    EVERY bandwidth regime — statics can't do that."""
+    for bw in (0.2 * GBPS, 2 * GBPS, 100 * GBPS):
+        trace = BandwidthTrace.constant(bw)
+        results = {}
+        for i, p in enumerate(synthetic_profiles[:6]):
+            results[f"s{i}"] = Simulator(
+                SimConfig(), StaticPolicy(p, f"s{i}"), trace,
+                _requests()).run().mean_jct()
+        results["default"] = Simulator(
+            SimConfig(), NoCompressionPolicy(), trace, _requests()
+        ).run().mean_jct()
+        controller = ServiceAwareController(
+            {w: synthetic_profiles for w in WORKLOADS})
+        kv = Simulator(SimConfig(), KVServePolicy(controller), trace,
+                       _requests()).run().mean_jct()
+        best_static = min(results.values())
+        assert kv <= best_static * 1.25, (bw, kv, results)
+
+
+def test_breakdown_accounting(synthetic_profiles):
+    trace = BandwidthTrace.constant(1 * GBPS)
+    res = Simulator(SimConfig(), StaticPolicy(synthetic_profiles[0], "s"),
+                    trace, _requests(10)).run()
+    bd = res.breakdown()
+    for r in res.requests:
+        total = sum(v for k, v in r.breakdown.items())
+        assert abs(total - r.jct) < 1e-6, (r.breakdown, r.jct)
+    assert bd["comm"] > 0 and bd["prefill"] > 0
+
+
+def test_pool_ttft_and_cachegen_fallback(synthetic_profiles):
+    """Fig 14: static method falls back to recompute under tight SLO; the
+    adaptive policy turns infeasible fetches into valid cache hits."""
+    trace = BandwidthTrace.constant(0.6 * GBPS)
+    reqs_f = _requests(30, seed=3, slo=0.35, prefix=1.0)
+    static = StaticPolicy(max(synthetic_profiles, key=lambda p: p.cr),
+                          "cachegen-like", slo_fallback_recompute=True)
+    res_static = Simulator(SimConfig(scenario="pool", prefill_tok_s=3000),
+                           static, trace, reqs_f).run()
+    controller = ServiceAwareController(
+        {w: synthetic_profiles for w in WORKLOADS})
+    res_kv = Simulator(SimConfig(scenario="pool", prefill_tok_s=3000),
+                       KVServePolicy(controller), trace,
+                       _requests(30, seed=3, slo=0.35, prefix=1.0)).run()
+    assert res_kv.mean_ttft() <= res_static.mean_ttft()
+
+
+def test_fault_injection_all_requests_complete(synthetic_profiles):
+    cfg = SimConfig(fail_rate=0.5, straggler_sigma=0.5, transient_slow_p=0.2,
+                    seed=11)
+    trace = BandwidthTrace.constant(1 * GBPS)
+    res = Simulator(cfg, StaticPolicy(synthetic_profiles[0], "s"), trace,
+                    _requests(30, seed=5)).run()
+    assert len(res.requests) == 30
+    assert all(r.done > r.arrival for r in res.requests)
+    assert any(r.retries > 0 for r in res.requests)  # failures were injected
+    # fault handling costs time but bounded: JCT still finite & reasonable
+    assert np.isfinite(res.jct()).all()
+
+
+def test_hedged_fetch_reduces_tail(synthetic_profiles):
+    trace = BandwidthTrace.constant(1 * GBPS)
+    trace_j = BandwidthTrace([0.0], [1 * GBPS], jitter=1.2, seed=4)
+    reqs = lambda: _requests(60, seed=9, prefix=1.0)
+    base = Simulator(SimConfig(scenario="pool", seed=1),
+                     StaticPolicy(synthetic_profiles[0], "s"), trace_j,
+                     reqs()).run()
+    hedged = Simulator(SimConfig(scenario="pool", hedge_factor=2.0, seed=1),
+                       StaticPolicy(synthetic_profiles[0], "s"),
+                       BandwidthTrace([0.0], [1 * GBPS], jitter=1.2, seed=4),
+                       reqs()).run()
+    assert np.percentile(hedged.ttft(), 95) <= np.percentile(base.ttft(), 95)
+
+
+def test_bandwidth_trace_integration():
+    tr = BandwidthTrace.steps([(0.0, 100.0), (1.0, 50.0)])
+    # 150 bytes starting at t=0: 100 in the first second, 50 in the next
+    assert abs(tr.transfer_time(0.0, 150.0) - 2.0) < 1e-9
+    assert abs(tr.at(0.5) - 100.0) < 1e-9 and abs(tr.at(1.5) - 50.0) < 1e-9
+
+
+def test_estimator_drift():
+    from repro.serving.network import GoodputEstimator
+    est = GoodputEstimator(alpha=0.5, initial=100.0)
+    for _ in range(10):
+        est.observe(50.0, 1.0)
+    assert abs(est.estimate - 50.0) < 1.0

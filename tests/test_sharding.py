@@ -1,0 +1,84 @@
+"""Sharding rules: divisibility fallback + cache spec selection.
+
+Uses a subprocess-free trick: rules logic is pure (mesh only supplies axis
+sizes), so we fabricate Mesh-like objects."""
+from dataclasses import dataclass
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distribution import sharding as sh
+
+
+@dataclass
+class FakeMesh:
+    axis_names: tuple
+    shape_tuple: tuple
+
+    @property
+    def devices(self):
+        class _D:
+            def __init__(self, s):
+                self.shape = s
+                self.size = int(np.prod(s))
+        return _D(self.shape_tuple)
+
+
+MESH1 = FakeMesh(("data", "model"), (16, 16))
+MESH2 = FakeMesh(("pod", "data", "model"), (2, 16, 16))
+
+
+def test_divisible_heads_shard():
+    spec = sh.resolve_axes(("embed", "heads", "head_dim"), (2560, 32, 128),
+                           MESH1)
+    assert spec == P(None, "model", None)
+
+
+def test_indivisible_heads_replicate():
+    # minicpm: 36 heads on a 16-way model axis -> fallback to replication
+    spec = sh.resolve_axes(("embed", "heads", "head_dim"), (2304, 36, 64),
+                           MESH1)
+    assert spec == P(None, None, None)
+
+
+def test_batch_pod_data():
+    spec = sh.resolve_axes(("batch", "seq"), (256, 4096), MESH2)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_batch_indivisible():
+    spec = sh.resolve_axes(("batch", "seq"), (1, 4096), MESH2)
+    assert spec == P(None, None)
+
+
+def test_vocab_odd_fallback():
+    # minicpm vocab 122753 is odd -> replicated
+    spec = sh.resolve_axes(("vocab", "embed"), (122753, 2304), MESH1)
+    assert spec == P(None, None)
+    spec2 = sh.resolve_axes(("vocab", "embed"), (151936, 2560), MESH1)
+    assert spec2 == P("model", None)
+
+
+def test_mesh_axis_never_reused():
+    spec = sh.resolve_axes(("heads", "mlp"), (32, 9728), MESH1)
+    used = [s for s in spec if s is not None]
+    assert len(used) == len(set(used)) == 1  # model used once
+
+
+def test_kv_cache_pspec_heads_vs_seq():
+    # kv=16 divisible -> heads sharded
+    assert sh.kv_cache_pspec(MESH1, (128, 32768, 16, 128)) == \
+        P("data", None, "model", None)
+    # kv=8 not divisible by 16 -> sequence sharding (flash-decoding style)
+    assert sh.kv_cache_pspec(MESH1, (128, 32768, 8, 128)) == \
+        P("data", "model", None, None)
+    # batch=1 (long_500k): no batch sharding
+    assert sh.kv_cache_pspec(MESH1, (1, 524288, 8, 128)) == \
+        P(None, "model", None, None)
+
+
+def test_mamba_state_pspec():
+    assert sh.mamba_state_pspec(MESH1, (128, 8192, 16)) == \
+        P("data", "model", None)
+    assert sh.mamba_state_pspec(MESH1, (1, 8190, 16)) == P(None, None, None)

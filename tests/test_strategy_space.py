@@ -1,0 +1,59 @@
+"""Strategy space: enumeration, serialization, analytic CR estimates."""
+import numpy as np
+import pytest
+
+from repro.core import StrategyConfig, enumerate_space, estimate_cr, space_sizes
+from repro.core.strategy import BASELINES, IDENTITY_STRATEGY, is_identity
+
+
+def test_space_growth():
+    sizes = space_sizes()
+    # Fig. 5-left: pipeline < module < hybrid (~10^4)
+    assert sizes["pipeline"] < sizes["module"] < sizes["hybrid"]
+    assert sizes["hybrid"] >= 5_000
+
+
+def test_unique_keys():
+    space = enumerate_space("module")
+    keys = {c.key() for c in space}
+    assert len(keys) == len(space)
+
+
+def test_json_roundtrip():
+    for cfg in list(BASELINES.values()) + [IDENTITY_STRATEGY]:
+        assert StrategyConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_identity_detection():
+    assert is_identity(IDENTITY_STRATEGY)
+    assert not is_identity(BASELINES["kivi"])
+
+
+def test_estimate_cr_ordering(kv_sample):
+    """Observation 2: analytic estimates order configs like measurements."""
+    from repro.core import CompressionPipeline
+    cfgs = [
+        StrategyConfig(quantizer="uniform", key_bits=b, value_bits=b,
+                       granularity="per_head")
+        for b in (2, 4, 8)
+    ]
+    est = [estimate_cr(c) for c in cfgs]
+    real = [CompressionPipeline(c).compress(kv_sample).compression_ratio()
+            for c in cfgs]
+    assert np.argsort(est).tolist() == np.argsort(real).tolist()
+
+
+def test_estimates_within_factor_two(kv_sample):
+    from repro.core import CompressionPipeline
+    for name in ("kivi", "mixhq"):
+        cfg = BASELINES[name]
+        est = estimate_cr(cfg, num_layers=4, kv_heads=4, seq=160, head_dim=64)
+        real = CompressionPipeline(cfg).compress(kv_sample).compression_ratio()
+        assert 0.5 < est / real < 2.0, (name, est, real)
+
+
+def test_validate_rejects_bad():
+    with pytest.raises(AssertionError):
+        StrategyConfig(transform="fft").validate()
+    with pytest.raises(AssertionError):
+        StrategyConfig(key_bits=0).validate()

@@ -1,0 +1,67 @@
+"""Transform stage: exact (float-exact) invertibility + structure."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.transforms import (
+    apply_transform,
+    hadamard_matrix,
+    invert_transform,
+    transform_meta_bytes,
+)
+
+
+@pytest.mark.parametrize("name", ["none", "delta", "hadamard", "affine"])
+def test_roundtrip(name):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((3, 2, 96, 64)).astype(np.float32)
+    y, ctx = apply_transform(name, x, delta_group=16)
+    x2 = invert_transform(y, ctx)
+    np.testing.assert_allclose(x2, x, atol=2e-5, rtol=1e-5)
+
+
+def test_hadamard_orthonormal():
+    for n in (8, 64, 128):
+        h = hadamard_matrix(n)
+        np.testing.assert_allclose(h @ h.T, np.eye(n), atol=1e-5)
+
+
+def test_hadamard_pads_non_pow2():
+    x = np.random.default_rng(1).standard_normal((2, 2, 16, 48)).astype(np.float32)
+    y, ctx = apply_transform("hadamard", x)
+    assert y.shape[-1] == 64 and ctx["pad_dim"] == 64
+    np.testing.assert_allclose(invert_transform(y, ctx), x, atol=2e-5)
+
+
+def test_hadamard_spreads_outliers():
+    """The point of the rotation: outlier channel energy spreads out."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((1, 1, 256, 64)).astype(np.float32)
+    x[..., 7] *= 50.0  # one outlier channel
+    y, _ = apply_transform("hadamard", x)
+    ratio_before = np.abs(x).max(axis=(0, 1, 2)).max() / np.abs(x).mean()
+    ratio_after = np.abs(y).max(axis=(0, 1, 2)).max() / np.abs(y).mean()
+    assert ratio_after < ratio_before / 2
+
+
+def test_delta_reduces_range_on_smooth_data():
+    t = np.linspace(0, 1, 128, dtype=np.float32)
+    x = np.broadcast_to(np.sin(t * 4)[None, None, :, None],
+                        (2, 2, 128, 32)).copy()
+    y, ctx = apply_transform("delta", x, delta_group=16)
+    assert np.abs(y).max() < np.abs(x).max()
+    assert transform_meta_bytes(ctx) > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    group=st.sampled_from([8, 16, 64]),
+    seq=st.integers(4, 80),
+    dim=st.sampled_from([8, 32, 64]),
+)
+def test_delta_roundtrip_property(seed, group, seq, dim):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((2, 1, seq, dim)) * 10).astype(np.float32)
+    y, ctx = apply_transform("delta", x, delta_group=group)
+    np.testing.assert_allclose(invert_transform(y, ctx), x, atol=1e-5)
