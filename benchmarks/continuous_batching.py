@@ -1,0 +1,125 @@
+"""Continuous-batching serving runtime (DESIGN.md §9, EXPERIMENTS.md
+§Serving): offered load × SLO mix × store capacity.
+
+Part A drives the *real-execution* ServingRuntime (tiny model, real
+compressed bytes, modelled loaded-cluster compute) and checks the two
+acceptance properties: ≥4 concurrent in-flight requests, and prefix-pool
+hits beating cold prefill on TTFT.
+
+Part B sweeps the event-driven simulator through the same shared
+scheduler/store code path at scale.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.profiles import Profile
+from repro.core.strategy import StrategyConfig
+from repro.serving import (
+    GBPS,
+    BandwidthTrace,
+    NoCompressionPolicy,
+    PrefixKVStore,
+    SchedulerConfig,
+    SimConfig,
+    Simulator,
+    StaticPolicy,
+    WorkloadMix,
+)
+
+
+def _pool_profile() -> Profile:
+    return Profile(StrategyConfig(quantizer="uniform", key_bits=8,
+                                  value_bits=8, granularity="per_channel",
+                                  codec="zstd3"),
+                   cr=3.0, s_enc=5e8, s_dec=5e8)
+
+
+# ---------------------------------------------------------------------------
+def run_runtime() -> None:
+    from repro.serving.engine import RuntimeConfig, ServingRuntime
+
+    cfg = RuntimeConfig(seq=96, decode_tokens=8,
+                        prefill_tok_s=2000.0, decode_tok_s=500.0)
+    rt = ServingRuntime(
+        static_profile=_pool_profile(), config=cfg,
+        trace=BandwidthTrace.constant(1 * GBPS),
+        scheduler=SchedulerConfig(max_slots=6, max_prefills_per_step=2,
+                                  max_queue=64))
+    # 12 requests over 4 workloads; repeated prompt seeds => pool hits.
+    t0 = time.perf_counter()
+    for i, w in enumerate(("qalike", "codelike", "mathlike", "summlike") * 3):
+        rt.submit(w, slo_class=("interactive", "standard", "batch")[i % 3],
+                  prompt_seed=i % 4)
+        rt.step()
+    rt.run()
+    us = (time.perf_counter() - t0) * 1e6
+    s = rt.summary()
+    assert s["max_in_flight"] >= 4, s
+    assert s["mean_ttft_hit"] < s["mean_ttft_cold"], s
+    emit("runtime_continuous_batching", us,
+         f"completed={s['completed']} max_in_flight={s['max_in_flight']} "
+         f"pool_hit_rate={s['pool_hit_rate']:.2f} "
+         f"ttft_hit={s['mean_ttft_hit']*1e3:.1f}ms "
+         f"ttft_cold={s['mean_ttft_cold']*1e3:.1f}ms "
+         f"speedup={s['mean_ttft_cold']/s['mean_ttft_hit']:.1f}x")
+
+
+# ---------------------------------------------------------------------------
+def run_sweep() -> None:
+    # 4-bit + zstd pool profile: a fetch moves ~1/6 of the KV bytes.
+    prof = Profile(StrategyConfig(quantizer="uniform", key_bits=4,
+                                  value_bits=4, granularity="per_channel",
+                                  codec="zstd3"),
+                   cr=6.0, s_enc=1e9, s_dec=1e9)
+    trace = BandwidthTrace.constant(1 * GBPS)
+    mixes = {
+        "uniform": None,
+        "tiered": {"interactive": 0.3, "standard": 0.4, "batch": 0.3},
+    }
+    # 4 prefill nodes x 2000 tok/s over ~4k-token prompts => capacity
+    # ~2 req/s: the rates bracket under-load, saturation, and overload.
+    for rate in (0.5, 2.0, 8.0):
+        for mix_name, mix in mixes.items():
+            for cap_name, cap in (("small", int(5e8)), ("large", 1 << 36)):
+                reqs = WorkloadMix(rate=rate, seed=11, q_min=0.0,
+                                   ctx_scale=0.25, prefix_hit_rate=0.7,
+                                   slo_class_mix=mix).generate(120)
+                store = PrefixKVStore(capacity_bytes=cap, block=1)
+                t0 = time.perf_counter()
+                res = Simulator(
+                    SimConfig(scenario="pool", prefill_tok_s=2000.0),
+                    StaticPolicy(prof, "pool"), trace, reqs, store=store,
+                    scheduler=SchedulerConfig(max_queue=40),
+                ).run()
+                us = (time.perf_counter() - t0) * 1e6
+                done = res.completed()
+                # Three-way: full hits (fetch only), partial hits (fetch +
+                # top-up prefill for the uncovered suffix), cold recomputes.
+                fetched = lambda r: r.breakdown.get("comm", 0) > 0
+                refill = lambda r: r.breakdown.get("prefill", 0) > 0
+                hits = [r for r in done if fetched(r) and not refill(r)]
+                partial = [r for r in done if fetched(r) and refill(r)]
+                colds = [r for r in done if refill(r) and not fetched(r)]
+                mean = lambda rs: (float(np.mean([r.ttft for r in rs]))
+                                   if rs else 0.0)
+                emit(f"sweep_rate{rate:g}_{mix_name}_{cap_name}", us,
+                     f"hit_rate={store.stats.hit_rate:.2f} "
+                     f"evictions={store.stats.evictions} "
+                     f"rejected={len(res.rejected())} "
+                     f"ttft_hit={mean(hits):.3f}s "
+                     f"ttft_partial={mean(partial):.3f}s(n={len(partial)}) "
+                     f"ttft_cold={mean(colds):.3f}s "
+                     f"p95_ttft={np.percentile(res.ttft(), 95):.3f}s")
+
+
+def run() -> None:
+    run_sweep()
+    run_runtime()
+
+
+if __name__ == "__main__":
+    run()

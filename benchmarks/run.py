@@ -23,6 +23,7 @@ SUITES = [
     ("fig15_latency_breakdown", "benchmarks.latency_breakdown"),
     ("fig16r_online_adaptivity", "benchmarks.online_adaptivity"),
     ("fig12_hardware_tiers", "benchmarks.hardware_tiers"),
+    ("serving_continuous_batching", "benchmarks.continuous_batching"),
     ("kernels", "benchmarks.kernel_throughput"),
     ("roofline", "benchmarks.roofline"),
 ]

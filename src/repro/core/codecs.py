@@ -7,16 +7,35 @@ closest faithful stand-in for nvCOMP's ANS.  ``bitshuffle`` transposes bit
 planes first (CacheGen-style plane coding) which materially improves the
 entropy stage on smooth quantized data.
 
+``zstandard`` is an *optional* dependency (the ``zstd`` packaging extra).
+Without it, the entropy stage falls back to the stdlib ``zlib`` (DEFLATE),
+mapping each zstd level to a comparable zlib level.  The fallback is still
+exactly lossless and byte accounting stays exact: wire bytes are always
+``len()`` of whatever the active backend produced.  Encode and decode must
+run with the same backend (payloads never persist across environments).
+
 Everything here is exactly lossless (property-tested).
 """
 from __future__ import annotations
 
+import zlib
 from typing import Tuple
 
 import numpy as np
-import zstandard as zstd
+
+try:  # optional: the `zstd` packaging extra
+    import zstandard as zstd
+    HAVE_ZSTD = True
+except ImportError:  # pragma: no cover - exercised by the no-zstd CI leg
+    zstd = None
+    HAVE_ZSTD = False
 
 Array = np.ndarray
+
+
+def backend() -> str:
+    """Active entropy-coding backend: ``"zstd"`` or ``"zlib"``."""
+    return "zstd" if HAVE_ZSTD else "zlib"
 
 
 # ---------------------------------------------------------------------------
@@ -64,6 +83,20 @@ def bitunshuffle(buf: bytes, bits: int, count: int) -> Array:
 # Codec dispatch.
 # ---------------------------------------------------------------------------
 _LEVELS = {"zstd1": 1, "zstd3": 3, "zstd10": 10, "bitshuffle_zstd3": 3}
+# zlib fallback levels chosen to mirror the zstd speed/ratio ladder.
+_ZLIB_LEVELS = {"zstd1": 1, "zstd3": 6, "zstd10": 9, "bitshuffle_zstd3": 6}
+
+
+def _entropy_encode(raw: bytes, codec: str) -> bytes:
+    if HAVE_ZSTD:
+        return zstd.ZstdCompressor(level=_LEVELS[codec]).compress(raw)
+    return zlib.compress(raw, _ZLIB_LEVELS[codec])
+
+
+def _entropy_decode(buf: bytes) -> bytes:
+    if HAVE_ZSTD:
+        return zstd.ZstdDecompressor().decompress(buf)
+    return zlib.decompress(buf)
 
 
 def encode_codes(codes: Array, bits: int, codec: str) -> bytes:
@@ -74,15 +107,13 @@ def encode_codes(codes: Array, bits: int, codec: str) -> bytes:
         packed = bitshuffle(codes, bits)
     else:
         packed = bitpack(codes, bits)
-    cctx = zstd.ZstdCompressor(level=_LEVELS[codec])
-    return cctx.compress(packed)
+    return _entropy_encode(packed, codec)
 
 
 def decode_codes(buf: bytes, bits: int, count: int, codec: str) -> Array:
     if codec == "none":
         return bitunpack(buf, bits, count)
-    dctx = zstd.ZstdDecompressor()
-    packed = dctx.decompress(buf)
+    packed = _entropy_decode(buf)
     if codec == "bitshuffle_zstd3":
         return bitunshuffle(packed, bits, count)
     return bitunpack(packed, bits, count)
@@ -93,9 +124,9 @@ def encode_f16(x: Array, codec: str) -> bytes:
     raw = np.ascontiguousarray(x, dtype=np.float16).tobytes()
     if codec == "none":
         return raw
-    return zstd.ZstdCompressor(level=_LEVELS[codec]).compress(raw)
+    return _entropy_encode(raw, codec)
 
 
 def decode_f16(buf: bytes, count: int, codec: str) -> Array:
-    raw = buf if codec == "none" else zstd.ZstdDecompressor().decompress(buf)
+    raw = buf if codec == "none" else _entropy_decode(buf)
     return np.frombuffer(raw, dtype=np.float16, count=count).copy()

@@ -6,6 +6,10 @@ Structural metadata (scales, zero-points, transform anchors, indices) is kept
 native but exactly byte-accounted, so the reported CR equals
 ``wire_bytes(original) / wire_bytes(compressed)`` including all metadata —
 this reproduces e.g. KIVI's metadata-bounded CR ceiling (paper Sec. 7.3).
+
+Stage implementations and the TPU/host split are described in DESIGN.md
+§2-§3; :class:`CompressedKV` is also the payload the serving layer's
+prefix-KV pool stores (DESIGN.md §9).
 """
 from __future__ import annotations
 

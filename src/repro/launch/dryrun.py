@@ -103,7 +103,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
             print(compiled.memory_analysis())
         except Exception as e:  # pragma: no cover
             print(f"memory_analysis unavailable: {e}")
-        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+        from repro.launch.hlo_cost import xla_cost_analysis
+        print({k: v for k, v in xla_cost_analysis(compiled).items()
                if k in ("flops", "bytes accessed")})
 
     # Optional: lower the compressed cross-pod KV migration for this cell

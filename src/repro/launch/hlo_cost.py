@@ -39,6 +39,15 @@ _EW_FLOP_OPS = {
 }
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized across jaxlib versions:
+    older jaxlibs return ``[dict]``, newer ones return the dict directly."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _shape_list(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
     out = []
     for dt, dims in _SHAPE_RE.findall(text):
@@ -134,8 +143,17 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
                     break
         args = rest[:end] if end is not None else rest
         attrs = rest[end + 1:] if end is not None else ""
-        operands = re.findall(r"%?([\w.\-]+)", args) if args.strip() else []
-        operands = [o for o in operands if not o[0].isdigit()]
+        # Operand entries are comma-separated and may be typed
+        # ("f32[256,256]{1,0} %Arg_0.1" on newer jaxlibs) or bare ("%a");
+        # strip bracket/brace groups, then the name is the entry's last token.
+        operands = []
+        if args.strip():
+            clean = re.sub(r"\[[^\]]*\]|\{[^}]*\}", "", args)
+            for entry in clean.split(","):
+                toks = entry.split()
+                if toks:
+                    operands.append(toks[-1].lstrip("%"))
+        operands = [o for o in operands if o and not o[0].isdigit()]
         instr = Instr(name=name, op=op, result_text=result_text,
                       rhs=args + "|" + attrs, operands=operands)
         cur.instrs.append(instr)

@@ -1,5 +1,17 @@
+from repro.serving.kvstore import (
+    SLO_CLASSES,
+    PrefixKVStore,
+    StoreEntry,
+    slo_rank,
+)
 from repro.serving.network import GBPS, BandwidthTrace, GoodputEstimator
 from repro.serving.request import Request, WorkloadMix, kv_bytes_for
+from repro.serving.scheduler import (
+    AdmissionController,
+    ContinuousScheduler,
+    SchedulerConfig,
+    priority_key,
+)
 from repro.serving.simulator import (
     KVServePolicy,
     NoCompressionPolicy,
@@ -10,8 +22,15 @@ from repro.serving.simulator import (
     StaticPolicy,
 )
 
+# NOTE: the real-execution runtime (ServingRuntime / DisaggregatedEngine)
+# lives in repro.serving.engine and is imported directly by its users — it
+# pulls in the jax model stack, which the simulator-only path doesn't need.
+
 __all__ = [
     "GBPS", "BandwidthTrace", "GoodputEstimator", "Request", "WorkloadMix",
     "kv_bytes_for", "KVServePolicy", "NoCompressionPolicy", "Policy",
     "SimConfig", "SimResult", "Simulator", "StaticPolicy",
+    "PrefixKVStore", "StoreEntry", "SLO_CLASSES", "slo_rank",
+    "ContinuousScheduler", "SchedulerConfig", "AdmissionController",
+    "priority_key",
 ]

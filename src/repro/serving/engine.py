@@ -1,23 +1,40 @@
-"""Real-execution disaggregated serving engine (CPU, tiny reference model).
+"""Real-execution disaggregated serving runtime (CPU, tiny reference model).
 
-A faithful miniature of the paper's vLLM integration: a prefill worker
-produces real KV, the KV crosses a (simulated-bandwidth) link as *actual
-compressed bytes* chosen by the Service-Aware Controller, and a decode
-worker decompresses and generates.  Used by the e2e example and the
-integration tests — every byte on the "wire" is real pipeline output.
+A faithful miniature of the paper's vLLM integration, in two granularities:
+
+* :class:`DisaggregatedEngine` — the original one-shot PD path: ``serve``
+  runs a single synchronous batch end-to-end (prefill -> compress -> wire
+  -> decompress -> decode) and reports a :class:`ServedBatch` breakdown.
+
+* :class:`ServingRuntime` — the continuous-batching, multi-tenant runtime
+  (DESIGN.md §9): ``submit`` enqueues :class:`~repro.serving.request.Request`
+  objects through the shared :class:`~repro.serving.scheduler.ContinuousScheduler`
+  (admission control + SLO-class priorities), and each ``step()`` is one
+  iteration — admit up to ``max_prefills_per_step`` prefill/fetch slots,
+  then advance every in-flight decode slot by one token.  Prompts whose
+  prefix is already in the :class:`~repro.serving.kvstore.PrefixKVStore`
+  are served from the pool (fetch real compressed bytes -> decompress ->
+  inject), reproducing the paper's KV-disaggregated TTFT path; misses run
+  a real prefill and write the compressed prefix back to the pool with the
+  profile the Service-Aware Controller picked for the request.
+
+Every byte on the "wire" is real pipeline output.  Compute time is either
+measured wall-clock or (for deterministic benchmarks) modelled from
+``prefill_tok_s`` / ``decode_tok_s``; communication time always comes from
+the :class:`~repro.serving.network.BandwidthTrace`.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.controller import Decision, ServiceAwareController, ServiceContext
-from repro.core.pipeline import CompressionPipeline
+from repro.core.pipeline import CompressedKV, CompressionPipeline
 from repro.core.profiles import Profile
 from repro.core.quality import (
     _greedy_decode,
@@ -29,7 +46,24 @@ from repro.core.quality import (
 )
 from repro.core.strategy import StrategyConfig, is_identity
 from repro.data.tokenizer import ByteTokenizer
+from repro.serving.kvstore import PrefixKVStore
 from repro.serving.network import BandwidthTrace, GoodputEstimator
+from repro.serving.request import Request, kv_bytes_for
+from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
+
+
+def _select_profile(controller: Optional[ServiceAwareController],
+                    static_profile: Optional[Profile],
+                    ctx: ServiceContext
+                    ) -> Tuple[Profile, Optional[Decision]]:
+    """Shared controller / static / identity three-way profile choice."""
+    if controller is not None:
+        d = controller.select(ctx)
+        return d.profile, d
+    if static_profile is not None:
+        return static_profile, None
+    from repro.core.profiles import IDENTITY_PROFILE
+    return IDENTITY_PROFILE, None
 
 
 @dataclass
@@ -96,15 +130,8 @@ class DisaggregatedEngine:
                              bandwidth=self.estimator.estimate,
                              t_slo=t_slo, q_min=q_min, t_model=t_prefill,
                              kv_bytes=v_bytes)
-        decision = None
-        if self.controller is not None:
-            decision = self.controller.select(ctx)
-            profile = decision.profile
-        elif self.static_profile is not None:
-            profile = self.static_profile
-        else:
-            from repro.core.profiles import IDENTITY_PROFILE
-            profile = IDENTITY_PROFILE
+        profile, decision = _select_profile(self.controller,
+                                            self.static_profile, ctx)
 
         # ---- compress -> wire -> decompress (real bytes) ----
         pipe = CompressionPipeline(profile.strategy)
@@ -141,3 +168,310 @@ class DisaggregatedEngine:
             t_compress=t_compress, t_comm=t_comm,
             t_decompress=t_decompress, t_decode=t_decode,
             agreement=agreement)
+
+
+# ===========================================================================
+# Continuous-batching runtime
+# ===========================================================================
+@dataclass
+class RuntimeConfig:
+    seq: int = 96                 # prompt tokens (padded/truncated)
+    decode_tokens: int = 12       # generation budget per request
+    # Virtual-clock cost model.  None = measure wall-clock (real execution
+    # time of the tiny model); a float models a loaded cluster, which is the
+    # paper's pool regime where prefill is the expensive path.
+    prefill_tok_s: Optional[float] = None
+    decode_tok_s: Optional[float] = None
+    pool_fetch_overhead: float = 0.002   # pool RPC setup cost (s)
+    store_capacity: int = 64 << 20       # wire bytes
+    store_block: int = 16
+
+
+@dataclass
+class ServedRequest:
+    """Per-request outcome of the continuous runtime (the per-request
+    analogue of :class:`ServedBatch`)."""
+
+    rid: int
+    workload: str
+    slo_class: str
+    text: str
+    tokens: np.ndarray
+    profile: str
+    pool_hit: bool
+    kv_bytes: int
+    wire_bytes: int               # bytes this request moved over the wire
+    arrival: float
+    done: float
+    ttft: float
+    # Critical-path decomposition; sums exactly to jct.  Keys: queue,
+    # prefill | comm+decompress, decode, stall (time spent waiting on the
+    # iteration's other stream, e.g. head-of-line prefill blocking decode).
+    breakdown: Dict[str, float] = field(default_factory=dict)
+    # Off-critical-path cost of writing the compressed prefix to the pool
+    # (compress + wire), charged to the background writer, not the request.
+    t_pool_write: float = 0.0
+
+    @property
+    def jct(self) -> float:
+        return self.done - self.arrival
+
+
+@dataclass
+class _Slot:
+    req: Request
+    caches: Any                   # batch-1 cache pytree
+    toks: List[int]               # generated tokens (incl. first)
+    pool_hit: bool
+    profile: str
+    wire_bytes: int
+    breakdown: Dict[str, float]
+    ttft: float
+    pool_write: float = 0.0       # off-path compress+write cost (misses)
+
+
+class ServingRuntime:
+    """Iteration-level (continuous-batching) serving of the tiny reference
+    model against a compressed prefix-KV pool."""
+
+    def __init__(self, controller: Optional[ServiceAwareController] = None,
+                 static_profile: Optional[Profile] = None,
+                 config: Optional[RuntimeConfig] = None,
+                 scheduler: Optional[SchedulerConfig] = None,
+                 store: Optional[PrefixKVStore] = None,
+                 trace: Optional[BandwidthTrace] = None):
+        self.cfg = config or RuntimeConfig()
+        self.controller = controller
+        self.static_profile = static_profile
+        self.scheduler = ContinuousScheduler(scheduler or SchedulerConfig())
+        # NOTE: `store or ...` would discard a passed-in *empty* store
+        # (PrefixKVStore defines __len__).
+        self.store = store if store is not None else PrefixKVStore(
+            self.cfg.store_capacity, block=self.cfg.store_block)
+        self.trace = trace or BandwidthTrace.constant(1e9)
+        self.estimator = GoodputEstimator(initial=self.trace.at(0.0))
+        self.model_cfg, self.params = get_reference_model()
+        max_len = self.cfg.seq + self.cfg.decode_tokens + 2
+        self._pre1, self._dec1 = _jitted_steps(
+            self.model_cfg.name, self.cfg.seq, 1, max_len)
+        self.tok = ByteTokenizer()
+        self.clock = 0.0
+        self.steps = 0
+        self.completed: List[ServedRequest] = []
+        self.step_log: List[Dict[str, float]] = []
+        self._slots: Dict[int, _Slot] = {}
+        self._prompts: Dict[int, np.ndarray] = {}
+        self._next_rid = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, workload: str, t_slo: float = 0.0, q_min: float = 0.97,
+               slo_class: str = "standard", out_tokens: Optional[int] = None,
+               prompt_seed: int = 0) -> Optional[int]:
+        """Admit one request at the current virtual time.  Two submissions
+        with the same (workload, prompt_seed) share a prompt, so the second
+        can be served from the prefix pool.  Returns the request id, or
+        None if admission control shed it."""
+        rid = self._next_rid
+        self._next_rid += 1
+        tokens, _ = _prompts_for(workload, 1, self.cfg.seq, prompt_seed)
+        tokens = np.asarray(tokens)[0]
+        m = self.model_cfg
+        req = Request(
+            rid=rid, workload=workload, arrival=self.clock,
+            ctx_tokens=self.cfg.seq,
+            out_tokens=(self.cfg.decode_tokens if out_tokens is None
+                        else min(out_tokens, self.cfg.decode_tokens)),
+            kv_bytes=kv_bytes_for(self.cfg.seq, m.num_layers, m.kv_heads,
+                                  m.resolved_head_dim),
+            t_slo=t_slo, q_min=q_min, slo_class=slo_class,
+            prefix_key=tuple(int(t) for t in tokens))
+        if not self.scheduler.submit(req, self.clock):
+            return None
+        self._prompts[rid] = tokens
+        return rid
+
+    # ------------------------------------------------------------------
+    def _empty_caches(self):
+        from repro.models.transformer import init_cache
+        return init_cache(self.model_cfg, 1,
+                          self.cfg.seq + self.cfg.decode_tokens + 2)
+
+    # ------------------------------------------------------------------
+    def _start_request(self, req: Request, now: float) -> float:
+        """Prefill-or-fetch for one admitted request.  Returns the virtual
+        cost this slot added to the iteration."""
+        tokens = self._prompts[req.rid]
+        key = req.prefix_key
+        # full=True: a partial (block-aligned) prefix hit would leave the
+        # uncovered prompt suffix without KV — the runtime has no top-up
+        # prefill, so only a full-coverage entry counts as a pool hit.
+        entry = self.store.lookup(key, now=now, full=True)
+        bd: Dict[str, float] = {"queue": now - req.arrival}
+
+        if entry is not None:
+            # ---- pool hit: fetch real compressed bytes, decompress, inject
+            comp, first = entry.payload
+            t_comm = self.trace.transfer_time(now, entry.wire_bytes)
+            self.estimator.observe(entry.wire_bytes, t_comm)
+            t0 = time.perf_counter()
+            pipe = CompressionPipeline(comp.strategy)
+            kv = pipe.decompress(comp)
+            t_decompress = time.perf_counter() - t0
+            # Cache injection is host-side bookkeeping of the miniature
+            # (the cold path's equivalent writes happen inside prefill),
+            # so it is not billed to the virtual clock.
+            caches = inject_kv(self.model_cfg, self._empty_caches(), 0, kv)
+            cost = self.cfg.pool_fetch_overhead + t_comm + t_decompress
+            bd.update(comm=self.cfg.pool_fetch_overhead + t_comm,
+                      decompress=t_decompress)
+            slot = _Slot(req=req, caches=caches, toks=[int(first)],
+                         pool_hit=True,
+                         profile=comp.strategy.short_name(),
+                         wire_bytes=int(entry.wire_bytes), breakdown=bd,
+                         ttft=(now + cost) - req.arrival)
+            self._slots[req.rid] = slot
+            return cost
+
+        # ---- miss: real prefill, then write the compressed prefix back
+        t0 = time.perf_counter()
+        logits, caches = self._pre1(self.params, {"tokens": tokens[None, :]})
+        jax.block_until_ready(logits)
+        t_wall = time.perf_counter() - t0
+        t_prefill = (req.ctx_tokens / self.cfg.prefill_tok_s
+                     if self.cfg.prefill_tok_s else t_wall)
+        first = int(np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))[0])
+        bd.update(prefill=t_prefill)
+
+        kv = extract_kv(self.model_cfg, caches, 0, upto=self.cfg.seq)
+        ctx = ServiceContext(workload=req.workload,
+                             bandwidth=self.estimator.estimate,
+                             t_slo=req.t_slo, q_min=req.q_min,
+                             t_model=t_prefill, kv_bytes=kv.nbytes_wire())
+        profile, decision = _select_profile(self.controller,
+                                            self.static_profile, ctx)
+        pipe = CompressionPipeline(profile.strategy)
+        t0 = time.perf_counter()
+        comp = pipe.compress(kv)
+        t_compress = time.perf_counter() - t0
+        wire = comp.total_bytes()
+        # The pool write crosses the wire off the request's critical path.
+        t_comm = self.trace.transfer_time(now + t_prefill + t_compress, wire)
+        self.estimator.observe(wire, t_comm)
+        self.store.put(key, (comp, first), wire, kv_bytes=kv.nbytes_wire(),
+                       workload=req.workload, slo_class=req.slo_class,
+                       now=now + t_prefill + t_compress + t_comm)
+        if self.controller is not None and decision is not None:
+            self.controller.observe(ctx, decision,
+                                    t_compress + t_comm + ctx.t_model)
+        slot = _Slot(req=req, caches=caches, toks=[first], pool_hit=False,
+                     profile=profile.strategy.short_name(),
+                     wire_bytes=int(wire), breakdown=bd,
+                     ttft=(now + t_prefill) - req.arrival,
+                     pool_write=t_compress + t_comm)
+        self._slots[req.rid] = slot
+        return t_prefill
+
+    # ------------------------------------------------------------------
+    def _finish(self, slot: _Slot, now: float) -> None:
+        req = slot.req
+        toks = np.asarray(slot.toks, dtype=np.int32)
+        req.ttft = slot.ttft
+        req.done = now
+        req.chosen = slot.profile
+        req.breakdown = slot.breakdown
+        req.slo_violated = req.t_slo > 0 and slot.ttft > req.t_slo
+        self.completed.append(ServedRequest(
+            rid=req.rid, workload=req.workload, slo_class=req.slo_class,
+            text=self.tok.decode(toks), tokens=toks, profile=slot.profile,
+            pool_hit=slot.pool_hit, kv_bytes=int(req.kv_bytes),
+            wire_bytes=slot.wire_bytes, arrival=req.arrival, done=now,
+            ttft=slot.ttft, breakdown=slot.breakdown,
+            t_pool_write=slot.pool_write))
+        self.scheduler.finish(req.rid)
+        del self._slots[req.rid]
+        self._prompts.pop(req.rid, None)
+
+    # ------------------------------------------------------------------
+    def step(self) -> Dict[str, float]:
+        """One scheduler iteration: admit prefill/fetch slots, then advance
+        every *previously running* decode slot by one token (a request's
+        first decode token comes the iteration after its prefill)."""
+        now = self.clock
+        started: List[Tuple[_Slot, float]] = []   # (slot, start-work end offset)
+        offset = 0.0
+        new_rids = set()
+        for req in self.scheduler.next_prefills(now):
+            offset += self._start_request(req, now + offset)
+            started.append((self._slots[req.rid], offset))
+            new_rids.add(req.rid)
+
+        # Iteration-level decode: every in-flight slot emits one token.
+        decode_wall = 0.0
+        active = [s for rid, s in self._slots.items() if rid not in new_rids]
+        for slot in active:
+            pos = self.cfg.seq + len(slot.toks) - 1
+            tok = jnp.asarray([[slot.toks[-1]]], jnp.int32)
+            t0 = time.perf_counter()
+            logits, slot.caches = self._dec1(self.params, slot.caches, tok,
+                                             jnp.asarray(pos, jnp.int32))
+            nxt = int(np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))[0])
+            decode_wall += time.perf_counter() - t0
+            slot.toks.append(nxt)
+        decode_cost = 0.0
+        if active:
+            decode_cost = (1.0 / self.cfg.decode_tok_s
+                           if self.cfg.decode_tok_s else decode_wall)
+
+        # An iteration costs the slower of the prefill and decode streams
+        # (PD-separated workers run them concurrently); the difference is
+        # charged to each slot as "stall" so breakdowns sum exactly to jct.
+        iter_cost = max(offset, decode_cost)
+        for slot in active:
+            slot.breakdown["decode"] = \
+                slot.breakdown.get("decode", 0.0) + decode_cost
+            slot.breakdown["stall"] = \
+                slot.breakdown.get("stall", 0.0) + iter_cost - decode_cost
+        for slot, end_offset in started:
+            slot.breakdown["stall"] = \
+                slot.breakdown.get("stall", 0.0) + iter_cost - end_offset
+        self.clock = now + iter_cost
+        self.steps += 1
+        for slot in list(self._slots.values()):
+            if len(slot.toks) > slot.req.out_tokens:
+                self._finish(slot, self.clock)
+
+        stats = {"step": float(self.steps), "clock": self.clock,
+                 "in_flight": float(len(active) + len(started)),
+                 "queue_depth": float(self.scheduler.queue_depth),
+                 "completed": float(len(self.completed)),
+                 "store_used": float(self.store.used_bytes)}
+        self.step_log.append(stats)
+        return stats
+
+    # ------------------------------------------------------------------
+    def run(self, max_steps: int = 10_000) -> List[ServedRequest]:
+        """Step until every admitted request completed (or max_steps)."""
+        while not self.scheduler.idle and self.steps < max_steps:
+            self.step()
+        return self.completed
+
+    # ------------------------------------------------------------------
+    def max_in_flight(self) -> int:
+        return int(max((s["in_flight"] for s in self.step_log), default=0))
+
+    def summary(self) -> Dict[str, float]:
+        hits = [r for r in self.completed if r.pool_hit]
+        cold = [r for r in self.completed if not r.pool_hit]
+        out = {
+            "completed": len(self.completed),
+            "rejected": self.scheduler.admission.rejected,
+            "max_in_flight": self.max_in_flight(),
+            "pool_hits": len(hits),
+            "pool_hit_rate": len(hits) / max(len(self.completed), 1),
+        }
+        if hits:
+            out["mean_ttft_hit"] = float(np.mean([r.ttft for r in hits]))
+        if cold:
+            out["mean_ttft_cold"] = float(np.mean([r.ttft for r in cold]))
+        out.update({f"store_{k}": v for k, v in self.store.summary().items()})
+        return out

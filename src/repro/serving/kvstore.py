@@ -1,0 +1,182 @@
+"""Compressed prefix-KV pool store (the paper's KV-disaggregated scenario).
+
+The pool holds :class:`repro.core.pipeline.CompressedKV` payloads (or, for
+the event-driven simulator, opaque payloads with the same byte accounting)
+keyed by the token prefix that produced them.  Three properties matter for
+reproducing the paper's TTFT path (Sec. 7.2 / Fig. 14):
+
+  * **Prefix matching** — lookups walk block-aligned prefixes of the query
+    tokens from longest to shortest, so a request whose prompt extends a
+    stored prefix still hits (vLLM-style hash-chain prefix caching).
+  * **Wire-byte capacity accounting** — the store is a *network-attached*
+    pool; what occupies it is the compressed wire footprint, not logical
+    KV bytes.  ``used_bytes == sum(entry.wire_bytes) <= capacity_bytes``
+    is an invariant after every operation.
+  * **SLO-aware LRU eviction** — victims are chosen lowest-SLO-class first
+    (batch before standard before interactive), least-recently-used within
+    a class, so latency-critical tenants keep their prefixes warm.
+
+Shared by the real-execution :class:`~repro.serving.engine.ServingRuntime`
+and the event-driven :class:`~repro.serving.simulator.Simulator` so both
+exercise one eviction code path (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+TokenKey = Tuple[int, ...]
+
+# Rank of each SLO class; lower = more latency-critical = evicted last.
+SLO_CLASSES: Dict[str, int] = {"interactive": 0, "standard": 1, "batch": 2}
+
+
+def slo_rank(slo_class: str) -> int:
+    return SLO_CLASSES.get(slo_class, SLO_CLASSES["standard"])
+
+
+@dataclass
+class StoreEntry:
+    tokens: TokenKey          # full token prefix this entry caches
+    payload: Any              # CompressedKV (+ first token) or sim stand-in
+    wire_bytes: int           # compressed wire footprint (capacity unit)
+    kv_bytes: float = 0.0     # uncompressed payload V (for fetch modelling)
+    workload: str = ""
+    slo_class: str = "standard"
+    created: float = 0.0
+    last_used: float = 0.0
+    hits: int = 0
+
+    @property
+    def rank(self) -> int:
+        return slo_rank(self.slo_class)
+
+
+@dataclass
+class StoreStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    rejected_puts: int = 0    # payload alone exceeded capacity
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class PrefixKVStore:
+    """Bounded pool of compressed KV prefixes with SLO-aware LRU eviction."""
+
+    def __init__(self, capacity_bytes: int, block: int = 16):
+        assert capacity_bytes > 0 and block > 0
+        self.capacity_bytes = int(capacity_bytes)
+        self.block = int(block)
+        self._entries: Dict[TokenKey, StoreEntry] = {}
+        self.used_bytes = 0
+        self.stats = StoreStats()
+
+    # ------------------------------------------------------------------
+    def _prefix_keys(self, tokens: TokenKey) -> List[TokenKey]:
+        """Candidate keys, longest first: the full prefix, then every
+        block-aligned truncation."""
+        tokens = tuple(tokens)
+        keys = [tokens]
+        n = (len(tokens) - 1) // self.block * self.block
+        while n > 0:
+            keys.append(tokens[:n])
+            n -= self.block
+        return keys
+
+    # ------------------------------------------------------------------
+    def lookup(self, tokens: TokenKey, now: float = 0.0,
+               full: bool = False) -> Optional[StoreEntry]:
+        """Longest stored prefix of ``tokens`` (None on miss).  Updates
+        recency and hit/miss counters.
+
+        ``full=True`` only accepts an entry covering *all* of ``tokens`` —
+        for consumers that cannot top-up-prefill the uncovered suffix of a
+        partial prefix match (e.g. the real-execution runtime).
+
+        Entries are only visible once their pool write has completed:
+        ``put`` stamps ``created`` with the write-completion time, and a
+        lookup at an earlier ``now`` misses (no time-travel hits)."""
+        keys = ([tuple(tokens)] if full else self._prefix_keys(tokens))
+        for key in keys:
+            e = self._entries.get(key)
+            if e is not None and e.created <= now:
+                e.last_used = now
+                e.hits += 1
+                self.stats.hits += 1
+                return e
+        self.stats.misses += 1
+        return None
+
+    def contains(self, tokens: TokenKey) -> bool:
+        return tuple(tokens) in self._entries
+
+    # ------------------------------------------------------------------
+    def _evict_order(self) -> List[StoreEntry]:
+        """Victims first: lowest SLO priority (highest rank), then LRU."""
+        return sorted(self._entries.values(),
+                      key=lambda e: (-e.rank, e.last_used))
+
+    def _make_room(self, need: int) -> List[StoreEntry]:
+        # put() has already rejected payloads larger than the whole pool.
+        evicted: List[StoreEntry] = []
+        order = self._evict_order()
+        while self.used_bytes + need > self.capacity_bytes and order:
+            victim = order.pop(0)
+            del self._entries[victim.tokens]
+            self.used_bytes -= victim.wire_bytes
+            self.stats.evictions += 1
+            evicted.append(victim)
+        return evicted
+
+    # ------------------------------------------------------------------
+    def put(self, tokens: TokenKey, payload: Any, wire_bytes: int,
+            kv_bytes: float = 0.0, workload: str = "",
+            slo_class: str = "standard", now: float = 0.0
+            ) -> List[StoreEntry]:
+        """Insert (or refresh) the entry for ``tokens``, evicting until it
+        fits.  Returns the evicted entries.  A payload larger than the whole
+        pool is rejected (counted, nothing evicted for it)."""
+        tokens = tuple(tokens)
+        wire_bytes = int(wire_bytes)
+        if wire_bytes > self.capacity_bytes:
+            self.stats.rejected_puts += 1
+            return []
+        old = self._entries.pop(tokens, None)
+        if old is not None:
+            self.used_bytes -= old.wire_bytes
+        evicted = self._make_room(wire_bytes)
+        self._entries[tokens] = StoreEntry(
+            tokens=tokens, payload=payload, wire_bytes=wire_bytes,
+            kv_bytes=kv_bytes, workload=workload, slo_class=slo_class,
+            created=now, last_used=now)
+        self.used_bytes += wire_bytes
+        assert self.used_bytes <= self.capacity_bytes
+        return evicted
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def free_bytes(self) -> int:
+        return self.capacity_bytes - self.used_bytes
+
+    def entries(self) -> List[StoreEntry]:
+        return list(self._entries.values())
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "entries": len(self._entries),
+            "used_bytes": self.used_bytes,
+            "capacity_bytes": self.capacity_bytes,
+            "hit_rate": self.stats.hit_rate,
+            "hits": self.stats.hits,
+            "misses": self.stats.misses,
+            "evictions": self.stats.evictions,
+            "rejected_puts": self.stats.rejected_puts,
+        }

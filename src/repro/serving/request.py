@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -20,6 +20,12 @@ class Request:
     t_slo: float = 0.0       # 0 = no SLO
     q_min: float = 0.97
     prefix_hit: bool = False  # pool scenario: reusable KV exists remotely
+    # Scheduler priority class: interactive | standard | batch
+    # (see repro.serving.kvstore.SLO_CLASSES).
+    slo_class: str = "standard"
+    # Token prefix identifying reusable KV in a PrefixKVStore; when set, the
+    # store (not the prefix_hit flag) decides pool hits.
+    prefix_key: Optional[Tuple[int, ...]] = None
 
     # ---- outcome fields (filled by the simulator) ----
     done: float = 0.0
@@ -53,13 +59,31 @@ class WorkloadMix:
     slo: float = 0.0
     q_min: float = 0.97
     prefix_hit_rate: float = 0.0
+    # Share of each SLO class, e.g. {"interactive": 0.3, "batch": 0.7}.
+    slo_class_mix: Optional[Dict[str, float]] = None
 
     def generate(self, n: int):
         rng = np.random.default_rng(self.seed)
+        # The new draws (prefix-pool reuse, SLO class) come from a second
+        # generator so the primary stream — and therefore every previously
+        # seeded workload (arrivals, ctx/out lengths, prefix_hit flags) —
+        # is byte-identical to what it produced before these fields existed.
+        rng_aux = np.random.default_rng((self.seed, 0x9E3779B9))
         mix = self.mix or {w: 1.0 for w in WORKLOADS}
         names = list(mix)
         probs = np.asarray([mix[w] for w in names], dtype=float)
         probs /= probs.sum()
+        classes, class_probs = ["standard"], np.asarray([1.0])
+        if self.slo_class_mix:
+            classes = list(self.slo_class_mix)
+            class_probs = np.asarray([self.slo_class_mix[c] for c in classes],
+                                     dtype=float)
+            class_probs /= class_probs.sum()
+        # Per-workload pool of previously issued prefixes: with probability
+        # prefix_hit_rate a request re-uses one (so a PrefixKVStore sees a
+        # genuine share-able prefix population; the first user of a prefix
+        # still pays the cold miss).
+        prefix_pools: Dict[str, list] = {w: [] for w in names}
         t = 0.0
         out = []
         for i in range(n):
@@ -69,11 +93,20 @@ class WorkloadMix:
             ctx = int(max(64, rng.lognormal(
                 np.log(spec.ctx_scale * self.ctx_scale * 16), 0.4)))
             gen = int(max(4, rng.poisson(spec.out_scale * 4)))
+            pool = prefix_pools[w]
+            if pool and rng_aux.random() < self.prefix_hit_rate:
+                key = pool[int(rng_aux.integers(len(pool)))]
+            else:
+                key = (i,)
+                pool.append(key)
             out.append(Request(
                 rid=i, workload=w, arrival=t, ctx_tokens=ctx, out_tokens=gen,
                 kv_bytes=kv_bytes_for(ctx, self.model_layers,
                                       self.model_kv_heads, self.model_head_dim),
                 t_slo=self.slo, q_min=self.q_min,
                 prefix_hit=bool(rng.random() < self.prefix_hit_rate),
+                slo_class=classes[int(rng_aux.choice(len(classes),
+                                                     p=class_probs))],
+                prefix_key=key,
             ))
         return out

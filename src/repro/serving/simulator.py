@@ -27,8 +27,10 @@ import numpy as np
 from repro.controller import Decision, ServiceAwareController, ServiceContext
 from repro.controller.latency_model import predicted_latency
 from repro.core.profiles import IDENTITY_PROFILE, Profile
+from repro.serving.kvstore import PrefixKVStore
 from repro.serving.network import BandwidthTrace, GoodputEstimator
 from repro.serving.request import Request
+from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
 
 
 # ---------------------------------------------------------------------------
@@ -132,11 +134,18 @@ class SimResult:
     requests: List[Request]
     policy: str
 
+    def completed(self) -> List[Request]:
+        return [r for r in self.requests if r.chosen != "rejected"]
+
+    def rejected(self) -> List[Request]:
+        """Requests shed by admission control (scheduled dispatch only)."""
+        return [r for r in self.requests if r.chosen == "rejected"]
+
     def jct(self) -> np.ndarray:
-        return np.asarray([r.jct for r in self.requests])
+        return np.asarray([r.jct for r in self.completed()])
 
     def ttft(self) -> np.ndarray:
-        return np.asarray([r.ttft for r in self.requests])
+        return np.asarray([r.ttft for r in self.completed()])
 
     def mean_jct(self) -> float:
         return float(self.jct().mean())
@@ -165,12 +174,29 @@ class SimResult:
 
 
 class Simulator:
+    """Event-driven serving simulator.
+
+    Optional serving-runtime integrations (shared with the real-execution
+    engine, see DESIGN.md §9):
+
+    * ``store`` — a :class:`PrefixKVStore`; the pool scenario then resolves
+      hits/misses (and capacity eviction) through the store via each
+      request's ``prefix_key`` instead of the static ``prefix_hit`` flag.
+    * ``scheduler`` — a :class:`SchedulerConfig`; requests are then
+      dispatched through :class:`ContinuousScheduler` (admission control +
+      SLO-class priority order) rather than strict arrival order.
+    """
+
     def __init__(self, config: SimConfig, policy: Policy,
-                 trace: BandwidthTrace, requests: Sequence[Request]):
+                 trace: BandwidthTrace, requests: Sequence[Request],
+                 store: Optional[PrefixKVStore] = None,
+                 scheduler: Optional[SchedulerConfig] = None):
         self.cfg = config
         self.policy = policy
         self.trace = trace
         self.requests = list(requests)
+        self.store = store
+        self.scheduler_cfg = scheduler
         self.rng = np.random.default_rng(config.seed)
         self.estimator = GoodputEstimator(alpha=config.estimator_alpha,
                                           initial=trace.at(0.0))
@@ -222,12 +248,43 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
+        if self.scheduler_cfg is not None:
+            self._run_scheduled()
+            return SimResult(self.requests, self.policy.name)
         for req in self.requests:
             if self.cfg.scenario == "pd":
                 self._run_pd(req)
             else:
                 self._run_pool(req)
         return SimResult(self.requests, self.policy.name)
+
+    def _run_scheduled(self) -> None:
+        """Dispatch through the shared ContinuousScheduler: admission
+        control sheds load beyond the queue bound, and waiting requests are
+        served in priority (not arrival) order.  The dispatch clock advances
+        to the next prefill-node free time, so under overload a backlog
+        accumulates and SLO-class ordering becomes visible."""
+        sched = ContinuousScheduler(self.scheduler_cfg)
+        pending = sorted(self.requests, key=lambda r: r.arrival)
+        idx, n = 0, len(pending)
+        now = 0.0
+        while idx < n or sched.queue_depth:
+            while idx < n and pending[idx].arrival <= now:
+                sched.submit(pending[idx], now)
+                idx += 1
+            if sched.queue_depth == 0:
+                if idx >= n:   # everything left was shed by admission
+                    break
+                now = pending[idx].arrival
+                continue
+            req = sched.pop_next(now)
+            start = max(now, req.arrival)
+            if self.cfg.scenario == "pd":
+                self._run_pd(req, start)
+            else:
+                self._run_pool(req, start)
+            if self.prefill.free_at:
+                now = max(now, self.prefill.free_at[0][0])
 
     # ------------------------------------------------------------------
     def _service_context(self, req: Request, t_model: float) -> ServiceContext:
@@ -242,8 +299,9 @@ class Simulator:
         return dt
 
     # ------------------------------------------------------------------
-    def _run_pd(self, req: Request) -> None:
+    def _run_pd(self, req: Request, start: Optional[float] = None) -> None:
         cfg = self.cfg
+        start = req.arrival if start is None else start
         t_prefill_base = req.ctx_tokens / cfg.prefill_tok_s
         t_decode_base = req.out_tokens / cfg.decode_tok_s
         ctx = self._service_context(req, t_prefill_base + t_decode_base)
@@ -251,11 +309,11 @@ class Simulator:
         req.chosen = profile.strategy.short_name()
 
         # prefill
-        t, q_wait = self._run_on_pool(self.prefill, req.arrival,
+        t, q_wait = self._run_on_pool(self.prefill, start,
                                       t_prefill_base, req)
-        req.breakdown["prefill"] = t - req.arrival - q_wait \
+        req.breakdown["prefill"] = t - start - q_wait \
             - req.breakdown.get("retry", 0.0)
-        req.breakdown["queue"] = q_wait
+        req.breakdown["queue"] = q_wait + (start - req.arrival)
 
         # compress -> transfer -> decompress
         v = req.kv_bytes
@@ -280,16 +338,31 @@ class Simulator:
         self.policy.feedback(ctx, decision, kv_latency + ctx.t_model)
 
     # ------------------------------------------------------------------
-    def _run_pool(self, req: Request) -> None:
+    def _run_pool(self, req: Request, start: Optional[float] = None) -> None:
         """Prefix-caching: fetch compressed KV from the remote pool or
-        recompute prefill.  TTFT is the metric."""
+        recompute prefill.  TTFT is the metric.
+
+        With a :class:`PrefixKVStore` attached, hits/misses come from real
+        store state (prefix matching + capacity eviction): a miss recomputes
+        and writes the compressed KV back (off the critical path), a hit
+        fetches the *stored* entry's bytes.  Without a store, the request's
+        static ``prefix_hit`` flag decides, and the fetch is billed at the
+        policy-chosen profile."""
         cfg = self.cfg
+        start = req.arrival if start is None else start
+        sched_wait = start - req.arrival
         t_prefill_base = req.ctx_tokens / cfg.prefill_tok_s
         ctx = self._service_context(req, cfg.pool_fetch_overhead)
         profile, decision = self.policy.choose(req, ctx)
         req.chosen = profile.strategy.short_name()
 
-        recompute = not req.prefix_hit
+        entry = None
+        if self.store is not None:
+            key = req.prefix_key if req.prefix_key is not None else (req.rid,)
+            entry = self.store.lookup(key, now=start)
+            recompute = entry is None
+        else:
+            recompute = not req.prefix_hit
         if not recompute and isinstance(self.policy, StaticPolicy) \
                 and self.policy.slo_fallback_recompute and req.t_slo > 0:
             # CacheGen-style: if the static profile cannot meet SLO, degrade
@@ -299,21 +372,42 @@ class Simulator:
                 recompute = True
 
         if recompute:
-            t, q_wait = self._run_on_pool(self.prefill, req.arrival,
+            t, q_wait = self._run_on_pool(self.prefill, start,
                                           t_prefill_base, req)
-            req.breakdown["prefill"] = t - req.arrival - q_wait \
+            req.breakdown["prefill"] = t - start - q_wait \
                 - req.breakdown.get("retry", 0.0)
-            req.breakdown["queue"] = q_wait
+            req.breakdown["queue"] = q_wait + sched_wait
             req.ttft = t - req.arrival
             req.done = t
             req.slo_violated = req.t_slo > 0 and req.ttft > req.t_slo
+            if self.store is not None:
+                # Write the freshly compressed prefix back to the pool (off
+                # the critical path).  The entry is stamped with the write's
+                # *completion* time (compress + wire) so lookups can't hit
+                # bytes still in flight — same rule as the engine path.
+                payload = req.kv_bytes / profile.cr
+                t_c = 0.0 if profile.s_enc == float("inf") \
+                    else req.kv_bytes / profile.s_enc
+                t_w = self._transfer(t + t_c, payload)
+                self.store.put(key, profile, int(payload),
+                               kv_bytes=req.kv_bytes, workload=req.workload,
+                               slo_class=req.slo_class, now=t + t_c + t_w)
             self.policy.feedback(ctx, decision, req.ttft)
             return
 
         # fetch compressed KV from the pool (with optional hedging)
-        v = req.kv_bytes
-        payload = v / profile.cr
-        t0 = req.arrival + cfg.pool_fetch_overhead
+        if entry is not None:
+            # Physically coherent: the wire carries what the pool stored.
+            stored: Profile = entry.payload
+            v = entry.kv_bytes
+            payload = float(entry.wire_bytes)
+            t_d = 0.0 if stored.s_dec == float("inf") else v / stored.s_dec
+            req.chosen = stored.strategy.short_name()
+        else:
+            v = req.kv_bytes
+            payload = v / profile.cr
+            t_d = 0.0 if profile.s_dec == float("inf") else v / profile.s_dec
+        t0 = start + cfg.pool_fetch_overhead
         t_comm = self._transfer(t0, payload)
         if cfg.hedge_factor > 0:
             expected = payload / self.estimator.estimate
@@ -323,10 +417,34 @@ class Simulator:
                     t0 + cfg.hedge_factor * expected, payload)
                 t_comm = min(t_comm, cfg.hedge_factor * expected + t_comm2)
                 req.retries += 1
-        t_d = 0.0 if profile.s_dec == float("inf") else v / profile.s_dec
+        req.breakdown["queue"] = sched_wait
         req.breakdown["comm"] = t_comm
         req.breakdown["decompress"] = t_d
-        req.ttft = cfg.pool_fetch_overhead + t_comm + t_d
+        fetch_done = start + cfg.pool_fetch_overhead + t_comm + t_d
+        # Coverage of this request's prompt by the stored prefix: by token
+        # count for real prefix keys, by KV bytes for synthetic (opaque)
+        # keys where the writer's context may be shorter than ours.
+        frac = 1.0
+        if entry is not None:
+            if req.prefix_key is not None \
+                    and len(entry.tokens) < len(req.prefix_key):
+                frac = len(entry.tokens) / len(req.prefix_key)
+            elif entry.kv_bytes > 0 and req.kv_bytes > entry.kv_bytes:
+                frac = entry.kv_bytes / req.kv_bytes
+        if frac < 1.0:
+            # Partial prefix hit: the uncovered prompt suffix still needs
+            # a top-up prefill on the prefill pool.
+            t_end, q_wait = self._run_on_pool(
+                self.prefill, fetch_done, (1.0 - frac) * t_prefill_base, req)
+            req.breakdown["queue"] += q_wait
+            req.breakdown["prefill"] = t_end - fetch_done - q_wait \
+                - req.breakdown.get("retry", 0.0)
+            req.ttft = t_end - req.arrival
+        else:
+            req.ttft = fetch_done - req.arrival
         req.done = req.arrival + req.ttft
         req.slo_violated = req.t_slo > 0 and req.ttft > req.t_slo
-        self.policy.feedback(ctx, decision, req.ttft)
+        if entry is None:
+            # Feedback only when the policy's own choice was exercised —
+            # store hits are served at the stored profile.
+            self.policy.feedback(ctx, decision, req.ttft)

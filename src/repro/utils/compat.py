@@ -1,0 +1,19 @@
+"""Small cross-version jax compatibility helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=...)``; on older
+    versions it lives in ``jax.experimental.shard_map`` and the kwarg is
+    ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check)

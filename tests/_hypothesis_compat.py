@@ -1,0 +1,69 @@
+"""Property-testing shim: real ``hypothesis`` when installed (the ``dev``
+packaging extra), otherwise a deterministic random-sampling fallback so the
+suite still collects and runs in minimal environments.
+
+The fallback draws ``max_examples`` pseudo-random cases from a fixed seed —
+weaker than hypothesis (no shrinking, no edge-case bias) but it exercises the
+same assertions over the same input domains.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # fallback sampler
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    st = _Strategies()
+
+    def settings(max_examples=25, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def runner():
+                n = getattr(runner, "_max_examples", 25)
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(n):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

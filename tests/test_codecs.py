@@ -1,7 +1,7 @@
 """Codec stage: exact losslessness (property-based) + size behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import codecs
 
@@ -53,6 +53,9 @@ def test_zstd_compresses_low_entropy():
     assert len(z) < len(raw) / 10
 
 
+@pytest.mark.skipif(not codecs.HAVE_ZSTD, reason="bit-plane gain is a "
+                    "property of zstd's entropy stage; the zlib fallback "
+                    "does not reproduce it")
 def test_bitshuffle_helps_smooth_data():
     """Bit-plane coding wins on quantized smooth streams (CacheGen-style)."""
     t = np.arange(16384)

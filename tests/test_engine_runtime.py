@@ -1,0 +1,103 @@
+"""Continuous-batching ServingRuntime e2e on the real tiny model."""
+import numpy as np
+import pytest
+
+from repro.core.profiles import Profile
+from repro.core.strategy import StrategyConfig
+from repro.serving import BandwidthTrace, GBPS, PrefixKVStore, SchedulerConfig
+
+
+def _profile():
+    # 8-bit per-channel: real compression on the pool path, near-lossless.
+    return Profile(StrategyConfig(quantizer="uniform", key_bits=8,
+                                  value_bits=8, granularity="per_channel"),
+                   cr=2.0, s_enc=5e8, s_dec=5e8)
+
+
+def _runtime(reference_model, **kw):
+    from repro.serving.engine import RuntimeConfig, ServingRuntime
+    cfg = RuntimeConfig(seq=64, decode_tokens=6,
+                        prefill_tok_s=2000.0, decode_tok_s=500.0)
+    defaults = dict(
+        static_profile=_profile(), config=cfg,
+        trace=BandwidthTrace.constant(1 * GBPS),
+        scheduler=SchedulerConfig(max_slots=6, max_prefills_per_step=2,
+                                  max_queue=32))
+    defaults.update(kw)
+    rt = ServingRuntime(**defaults)
+    # pin the session-cached reference model (avoids retraining paths)
+    rt.model_cfg, rt.params = reference_model
+    return rt
+
+
+@pytest.mark.slow
+def test_pool_hit_beats_cold_prefill_ttft(reference_model):
+    """The paper's TTFT path: a prefix-pool hit (fetch real compressed
+    bytes + decompress + inject) must beat recomputing prefill."""
+    rt = _runtime(reference_model)
+    cold_rid = rt.submit("qalike", prompt_seed=42)
+    rt.run()
+    assert len(rt.store) == 1  # prefix written back to the pool
+    hit_rid = rt.submit("qalike", prompt_seed=42)  # identical prompt
+    rt.run()
+
+    by_rid = {r.rid: r for r in rt.completed}
+    cold, hit = by_rid[cold_rid], by_rid[hit_rid]
+    assert not cold.pool_hit and hit.pool_hit
+    assert hit.ttft < cold.ttft
+    assert hit.breakdown["comm"] > 0 and hit.breakdown.get("prefill", 0) == 0
+    assert cold.breakdown["prefill"] > 0
+    assert cold.t_pool_write > 0 and hit.t_pool_write == 0
+    # real bytes moved: the hit fetched exactly what the cold request stored
+    assert hit.wire_bytes == cold.wire_bytes > 0
+    assert hit.wire_bytes < cold.kv_bytes  # compressed on the wire
+    # both generated a full completion
+    assert len(hit.tokens) == len(cold.tokens) == rt.cfg.decode_tokens + 1
+    assert rt.store.stats.hits == 1
+
+
+@pytest.mark.slow
+def test_runtime_sustains_concurrent_in_flight_requests(reference_model):
+    rt = _runtime(reference_model)
+    rids = [rt.submit(w, prompt_seed=i) for i, w in enumerate(
+        ("qalike", "codelike", "mathlike", "summlike", "qalike", "codelike"))]
+    assert all(r is not None for r in rids)
+    done = rt.run()
+    assert len(done) == 6
+    assert rt.max_in_flight() >= 4  # continuous batching, not one-by-one
+    for r in done:
+        assert r.jct >= r.ttft > 0
+        total = sum(r.breakdown.values())
+        assert total == pytest.approx(r.jct, abs=1e-6), (r.breakdown, r.jct)
+
+
+@pytest.mark.slow
+def test_runtime_admission_and_slo_priority(reference_model):
+    rt = _runtime(reference_model,
+                  scheduler=SchedulerConfig(max_slots=2,
+                                            max_prefills_per_step=1,
+                                            max_queue=4, aging_s=0.0))
+    assert rt.submit("qalike", slo_class="batch", prompt_seed=0) is not None
+    assert rt.submit("qalike", slo_class="batch", prompt_seed=1) is not None
+    assert rt.submit("qalike", slo_class="batch", prompt_seed=2) is not None
+    assert rt.submit("qalike", slo_class="interactive",
+                     prompt_seed=3) is not None
+    # queue bound (4) reached -> load shed
+    assert rt.submit("qalike", slo_class="batch", prompt_seed=4) is None
+    rt.run()
+    assert len(rt.completed) == 4
+    # the interactive request jumped the batch queue: first token first
+    inter = [r for r in rt.completed if r.slo_class == "interactive"][0]
+    batch_ttfts = [r.ttft for r in rt.completed if r.slo_class == "batch"]
+    assert inter.ttft <= min(batch_ttfts)
+
+
+@pytest.mark.slow
+def test_store_eviction_under_tiny_capacity(reference_model):
+    store = PrefixKVStore(capacity_bytes=40_000, block=16)
+    rt = _runtime(reference_model, store=store)
+    for i in range(4):
+        rt.submit("codelike", prompt_seed=100 + i)
+        rt.run()
+    assert store.used_bytes <= store.capacity_bytes
+    assert store.stats.evictions > 0 or store.stats.rejected_puts > 0

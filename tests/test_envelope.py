@@ -1,7 +1,7 @@
 """Theorems 6.1 / 6.2: property tests against brute force."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.controller import (
     bandwidth_threshold,

@@ -1,0 +1,108 @@
+"""Prefix-KV pool store: capacity invariant, eviction policy, prefix hits."""
+import numpy as np
+import pytest
+
+from repro.serving.kvstore import SLO_CLASSES, PrefixKVStore, slo_rank
+
+
+def _toks(i, n=32):
+    return tuple(range(i * 1000, i * 1000 + n))
+
+
+def test_capacity_invariant_under_random_churn():
+    rng = np.random.default_rng(0)
+    store = PrefixKVStore(capacity_bytes=10_000, block=8)
+    classes = list(SLO_CLASSES)
+    for i in range(300):
+        size = int(rng.integers(100, 3000))
+        store.put(_toks(int(rng.integers(50))), payload=i, wire_bytes=size,
+                  slo_class=classes[int(rng.integers(3))], now=float(i))
+        assert store.used_bytes <= store.capacity_bytes
+        assert store.used_bytes == sum(e.wire_bytes for e in store.entries())
+    assert store.stats.evictions > 0
+
+
+def test_oversized_payload_rejected_without_eviction():
+    store = PrefixKVStore(capacity_bytes=1000)
+    store.put(_toks(0), "a", 800, now=0.0)
+    evicted = store.put(_toks(1), "big", 5000, now=1.0)
+    assert evicted == [] and store.stats.rejected_puts == 1
+    assert store.used_bytes == 800 and len(store) == 1  # untouched
+
+
+def test_slo_aware_lru_eviction_order():
+    """batch evicted before standard before interactive; LRU within class."""
+    store = PrefixKVStore(capacity_bytes=1000)
+    store.put(_toks(0), "i", 250, slo_class="interactive", now=0.0)
+    store.put(_toks(1), "b_old", 250, slo_class="batch", now=1.0)
+    store.put(_toks(2), "b_new", 250, slo_class="batch", now=2.0)
+    store.put(_toks(3), "s", 250, slo_class="standard", now=3.0)
+    # needs 500 bytes -> evicts the two batch entries, LRU first
+    evicted = store.put(_toks(4), "x", 500, slo_class="standard", now=4.0)
+    assert [e.payload for e in evicted] == ["b_old", "b_new"]
+    assert store.contains(_toks(0)) and store.contains(_toks(3))
+
+
+def test_lru_recency_updated_by_lookup():
+    store = PrefixKVStore(capacity_bytes=500)
+    store.put(_toks(0), "a", 200, now=0.0)
+    store.put(_toks(1), "b", 200, now=1.0)
+    store.lookup(_toks(0), now=5.0)  # refresh "a"
+    evicted = store.put(_toks(2), "c", 300, now=6.0)
+    assert [e.payload for e in evicted] == ["b"]
+
+
+def test_prefix_matching_block_aligned():
+    store = PrefixKVStore(capacity_bytes=10_000, block=16)
+    base = tuple(range(32))
+    store.put(base, "kv32", 100, now=0.0)
+    # a longer prompt sharing the stored 32-token prefix hits it
+    hit = store.lookup(base + tuple(range(100, 148)), now=1.0)
+    assert hit is not None and hit.payload == "kv32"
+    # an unrelated prompt misses
+    assert store.lookup(tuple(range(500, 548)), now=2.0) is None
+    # longest stored prefix wins
+    store.put(base + tuple(range(100, 116)), "kv48", 100, now=3.0)
+    hit = store.lookup(base + tuple(range(100, 148)), now=4.0)
+    assert hit.payload == "kv48"
+    assert store.stats.hits == 2 and store.stats.misses == 1
+
+
+def test_compressed_kv_roundtrips_bit_exact_through_store():
+    """A pool hit must hand back byte-identical KV: compress -> store ->
+    lookup -> decompress reproduces the (fp16-representable) cache exactly."""
+    from repro.core.kvcache import KVCache
+    from repro.core.pipeline import CompressionPipeline
+    from repro.core.strategy import IDENTITY_STRATEGY
+
+    kv = KVCache.random(num_layers=2, kv_heads=2, seq=64, head_dim=32, seed=3)
+    kv = KVCache(kv.k.astype(np.float16).astype(np.float32),
+                 kv.v.astype(np.float16).astype(np.float32))
+    pipe = CompressionPipeline(IDENTITY_STRATEGY)
+    comp = pipe.compress(kv)
+
+    store = PrefixKVStore(capacity_bytes=comp.total_bytes() + 1000, block=16)
+    store.put(tuple(range(64)), comp, comp.total_bytes(), now=0.0)
+    entry = store.lookup(tuple(range(64)) + (99,), now=1.0)
+    assert entry is not None
+    restored = CompressionPipeline(entry.payload.strategy).decompress(
+        entry.payload)
+    np.testing.assert_array_equal(restored.k, kv.k)
+    np.testing.assert_array_equal(restored.v, kv.v)
+
+
+def test_full_lookup_requires_exact_coverage():
+    """full=True consumers (the runtime) can't top-up a partial prefix, so
+    an entry covering only part of the prompt must not count as a hit."""
+    store = PrefixKVStore(capacity_bytes=10_000, block=16)
+    base = tuple(range(32))
+    store.put(base, "kv32", 100, now=0.0)
+    assert store.lookup(base + tuple(range(100, 116)), now=1.0,
+                        full=True) is None
+    assert store.lookup(base, now=2.0, full=True).payload == "kv32"
+    assert store.stats.misses == 1 and store.stats.hits == 1
+
+
+def test_slo_rank_mapping():
+    assert slo_rank("interactive") < slo_rank("standard") < slo_rank("batch")
+    assert slo_rank("unknown-class") == slo_rank("standard")

@@ -1,6 +1,6 @@
 """3D Pareto frontier: dominance properties (hypothesis vs brute force)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.profiles import Profile
 from repro.core.strategy import StrategyConfig

@@ -1,7 +1,7 @@
 """Quantizer stage: error bounds, bucketing, metadata accounting."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.quantizers import (
     group_dequantize,

@@ -1,0 +1,184 @@
+"""Continuous scheduler: admission, SLO-class priority, shared sim path."""
+import numpy as np
+import pytest
+
+from repro.serving import (
+    GBPS,
+    BandwidthTrace,
+    ContinuousScheduler,
+    NoCompressionPolicy,
+    PrefixKVStore,
+    Request,
+    SchedulerConfig,
+    SimConfig,
+    Simulator,
+    StaticPolicy,
+    WorkloadMix,
+    priority_key,
+)
+
+
+def _req(rid, arrival=0.0, slo_class="standard", t_slo=0.0):
+    return Request(rid=rid, workload="qalike", arrival=arrival,
+                   ctx_tokens=128, out_tokens=8, kv_bytes=1e6,
+                   t_slo=t_slo, slo_class=slo_class)
+
+
+# ---------------------------------------------------------------------------
+# Pure policy layer
+# ---------------------------------------------------------------------------
+def test_priority_orders_slo_classes_then_slack_then_fifo():
+    cfg = SchedulerConfig(aging_s=0.0)
+    inter = _req(0, arrival=3.0, slo_class="interactive")
+    tight = _req(1, arrival=1.0, slo_class="standard", t_slo=2.0)
+    loose = _req(2, arrival=0.0, slo_class="standard", t_slo=50.0)
+    batch = _req(3, arrival=0.0, slo_class="batch")
+    order = sorted([batch, loose, tight, inter],
+                   key=lambda r: priority_key(r, now=4.0, cfg=cfg))
+    assert [r.rid for r in order] == [0, 1, 2, 3]
+
+
+def test_aging_promotes_starved_batch_requests():
+    cfg = SchedulerConfig(aging_s=5.0)
+    old_batch = _req(0, arrival=0.0, slo_class="batch")
+    fresh_inter = _req(1, arrival=59.0, slo_class="interactive")
+    # after 60s the batch request has been promoted past interactive
+    assert priority_key(old_batch, 60.0, cfg) < priority_key(fresh_inter,
+                                                             60.0, cfg)
+
+
+def test_admission_bounds_queue_and_sheds_load():
+    sched = ContinuousScheduler(SchedulerConfig(max_queue=4))
+    admitted = [sched.submit(_req(i, t_slo=1.0), now=0.0) for i in range(10)]
+    assert sum(admitted) == 4 and sched.queue_depth == 4
+    assert sched.admission.rejected == 6
+    rejected = [r for ok, r in zip(admitted, range(10)) if not ok]
+    assert len(rejected) == 6
+
+
+def test_iteration_level_prefill_admission_respects_slots():
+    cfg = SchedulerConfig(max_slots=3, max_prefills_per_step=2, max_queue=64)
+    sched = ContinuousScheduler(cfg)
+    for i in range(8):
+        sched.submit(_req(i), now=0.0)
+    first = sched.next_prefills(now=0.0)
+    assert len(first) == 2 and sched.in_flight == 2
+    second = sched.next_prefills(now=0.0)   # only 1 slot left
+    assert len(second) == 1 and sched.in_flight == 3
+    assert sched.next_prefills(now=0.0) == []  # saturated
+    sched.finish(first[0].rid)
+    assert len(sched.next_prefills(now=0.0)) == 1
+
+
+def test_pop_next_is_priority_not_fifo():
+    sched = ContinuousScheduler(SchedulerConfig(aging_s=0.0))
+    sched.submit(_req(0, slo_class="batch"), now=0.0)
+    sched.submit(_req(1, slo_class="interactive"), now=0.0)
+    sched.submit(_req(2, slo_class="standard"), now=0.0)
+    assert sched.pop_next(0.0).rid == 1
+    assert sched.pop_next(0.0).rid == 2
+    assert sched.pop_next(0.0).rid == 0
+
+
+# ---------------------------------------------------------------------------
+# Shared code path: scheduler + store driving the event simulator
+# ---------------------------------------------------------------------------
+def test_sim_scheduled_priority_helps_interactive_under_overload():
+    """Overloaded PD cluster: interactive class must see lower JCT than
+    batch when the shared scheduler orders dispatch, and the gap must be
+    driven by scheduling (same workloads, same nodes)."""
+    mk = lambda: WorkloadMix(
+        rate=40.0, seed=7, q_min=0.0,
+        slo_class_mix={"interactive": 0.5, "batch": 0.5}).generate(80)
+    cfg = SimConfig(n_prefill=1, n_decode=1, prefill_tok_s=4000.0)
+    trace = BandwidthTrace.constant(1 * GBPS)
+    res = Simulator(cfg, NoCompressionPolicy(), trace, mk(),
+                    scheduler=SchedulerConfig(max_queue=10_000,
+                                              aging_s=0.0)).run()
+    jct = {c: np.mean([r.jct for r in res.completed() if r.slo_class == c])
+           for c in ("interactive", "batch")}
+    assert jct["interactive"] < jct["batch"]
+    assert len(res.completed()) == 80  # nothing lost
+
+
+def test_sim_scheduled_admission_rejects_overload():
+    mk = WorkloadMix(rate=200.0, seed=3, q_min=0.0).generate(60)
+    cfg = SimConfig(n_prefill=1, prefill_tok_s=2000.0)
+    res = Simulator(cfg, NoCompressionPolicy(),
+                    BandwidthTrace.constant(1 * GBPS), mk,
+                    scheduler=SchedulerConfig(max_queue=5)).run()
+    assert len(res.rejected()) > 0
+    assert len(res.rejected()) + len(res.completed()) == 60
+    # rejected requests don't pollute latency metrics
+    assert np.isfinite(res.jct()).all()
+
+
+def test_sim_scheduled_zero_queue_rejects_everything():
+    """max_queue=0 sheds every request without crashing the dispatch loop."""
+    reqs = WorkloadMix(rate=5.0, seed=2, q_min=0.0).generate(10)
+    res = Simulator(SimConfig(), NoCompressionPolicy(),
+                    BandwidthTrace.constant(1 * GBPS), reqs,
+                    scheduler=SchedulerConfig(max_queue=0)).run()
+    assert len(res.rejected()) == 10 and not res.completed()
+
+
+def test_sim_pool_store_hits_beat_cold_and_evictions_cause_misses(
+        synthetic_profiles):
+    """With a real store, the first user of a prefix pays recompute and
+    later users hit; shrinking capacity forces evictions and misses."""
+    prof = max(synthetic_profiles, key=lambda p: p.cr)
+    # Arrivals must be slower than prefill: pool entries only become
+    # visible once their write completes, so back-to-back arrivals would
+    # all miss (no time-travel hits).
+    mk = lambda seed: WorkloadMix(rate=0.05, seed=seed, q_min=0.0,
+                                  prefix_hit_rate=0.8).generate(50)
+    cfg = SimConfig(scenario="pool", prefill_tok_s=3000.0)
+    trace = BandwidthTrace.constant(1 * GBPS)
+
+    big = PrefixKVStore(capacity_bytes=1 << 34, block=1)
+    res = Simulator(cfg, StaticPolicy(prof, "s"), trace, mk(0),
+                    store=big).run()
+    # full hits only: partial hits carry both comm and top-up prefill
+    hits = [r for r in res.completed() if r.breakdown.get("comm", 0) > 0
+            and r.breakdown.get("prefill", 0) == 0]
+    colds = [r for r in res.completed() if r.breakdown.get("prefill", 0) > 0
+             and r.breakdown.get("comm", 0) == 0]
+    partials = [r for r in res.completed() if r.breakdown.get("comm", 0) > 0
+                and r.breakdown.get("prefill", 0) > 0]
+    assert hits and colds
+    assert np.mean([r.ttft for r in hits]) < np.mean([r.ttft for r in colds])
+    assert big.stats.hits == len(hits) + len(partials)
+    assert big.stats.evictions == 0
+
+    small = PrefixKVStore(capacity_bytes=int(4e8), block=1)
+    res2 = Simulator(cfg, StaticPolicy(prof, "s"), trace, mk(0),
+                     store=small).run()
+    assert small.stats.evictions > 0
+    assert small.stats.hits < big.stats.hits  # evictions turned hits to misses
+
+
+def test_sim_pool_partial_prefix_hit_pays_topup_prefill(synthetic_profiles):
+    """An entry covering only part of the prompt is fetched AND the
+    uncovered suffix is top-up prefilled — TTFT sits between a full hit
+    and a cold recompute."""
+    prof = max(synthetic_profiles, key=lambda p: p.cr)
+    store = PrefixKVStore(capacity_bytes=1 << 34, block=16)
+    full_key = tuple(range(64))
+    store.put(full_key[:32], prof, int(1e6), kv_bytes=5e6, now=0.0)
+
+    def req(rid, key):
+        from repro.serving import Request
+        return Request(rid=rid, workload="qalike", arrival=0.0,
+                       ctx_tokens=2000, out_tokens=8, kv_bytes=1e7,
+                       q_min=0.0, prefix_key=key)
+
+    cfg = SimConfig(scenario="pool", prefill_tok_s=500.0)
+    trace = BandwidthTrace.constant(1 * GBPS)
+    partial = Simulator(cfg, StaticPolicy(prof, "s"), trace,
+                        [req(0, full_key)], store=store).run().requests[0]
+    assert partial.breakdown["comm"] > 0          # fetched the prefix
+    assert partial.breakdown["prefill"] > 0       # topped-up the suffix
+    # roughly half the prompt recomputed: cheaper than full cold prefill
+    t_cold = 2000 / 500.0
+    assert partial.breakdown["prefill"] < t_cold
+    assert partial.ttft < t_cold + 0.5

@@ -1,7 +1,7 @@
 """Transform stage: exact (float-exact) invertibility + structure."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.transforms import (
     apply_transform,
