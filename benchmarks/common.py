@@ -11,13 +11,24 @@ import time
 from typing import Callable, Dict, List, Optional
 
 ROWS: List[str] = []
+_ROWS_STRUCTURED: List[Dict[str, object]] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
+    _ROWS_STRUCTURED.append({"name": name, "us_per_call": us_per_call,
+                             "derived": derived})
     print(row)
     sys.stdout.flush()
+
+
+def write_json(path: str) -> None:
+    """Archive the emitted rows as machine-readable JSON (CI artifact)."""
+    import json
+    with open(path, "w") as f:
+        json.dump(_ROWS_STRUCTURED, f, indent=1)
+    print(f"# wrote {len(_ROWS_STRUCTURED)} rows to {path}")
 
 
 def time_call(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:

@@ -79,9 +79,14 @@ class ResidualBandit:
                 return min(best_effort, key=lambda pt: pt[1])[0]
             return IDENTITY_PROFILE
 
+        greedy = min(usable, key=lambda pt: pt[1])
         if self._rng.random() < self.config.epsilon and len(usable) > 1:
-            return self._rng.choice(usable[1:])[0]
-        return min(usable, key=lambda pt: pt[1])[0]
+            # Explore a non-greedy arm: exclude the corrected-latency argmin
+            # (usable is in candidate order, so usable[1:] would exclude an
+            # arbitrary arm instead).
+            return self._rng.choice(
+                [pt for pt in usable if pt is not greedy])[0]
+        return greedy[0]
 
     # ------------------------------------------------------------------
     def update(self, interval: int, p: Profile, ctx: ServiceContext,

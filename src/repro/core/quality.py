@@ -109,6 +109,37 @@ def extract_kv(cfg, caches, batch_idx: int, upto: int) -> KVCache:
     return KVCache(np.stack(ks), np.stack(vs))
 
 
+def copy_cache_slot(cfg, dst, src, slot, src_idx: int = 0):
+    """Write one batch row of the ``src`` cache pytree into row ``slot`` of
+    the (larger-batch) ``dst`` arena pytree — how a fresh batch-1 prefill
+    lands in its slot.  Jitted once; ``slot`` is a traced scalar so slot
+    recycling never recompiles."""
+    if "self" in dst:
+        raise NotImplementedError("slot arena: decoder-only caches")
+    return _slot_copy(dst, src, jnp.asarray(slot, jnp.int32),
+                      jnp.asarray(src_idx, jnp.int32))
+
+
+@jax.jit
+def _slot_copy(dst, src, slot, src_idx):
+    def _write(batch_axis):
+        def w(d, s):
+            row = jax.lax.dynamic_slice_in_dim(s, src_idx, 1, batch_axis)
+            start = [0] * d.ndim
+            start[batch_axis] = slot
+            return jax.lax.dynamic_update_slice(
+                d, row.astype(d.dtype), tuple(start))
+        return w
+
+    # prefix leaves carry batch at axis 0, scanned blocks at axis 1
+    return {
+        "prefix": jax.tree_util.tree_map(_write(0), dst["prefix"],
+                                         src["prefix"]),
+        "blocks": jax.tree_util.tree_map(_write(1), dst["blocks"],
+                                         src["blocks"]),
+    }
+
+
 def inject_kv(cfg, caches, batch_idx: int, kv: KVCache):
     """Write a (possibly lossy) KVCache back into the cache pytree."""
     from repro.models.transformer import plan_stack
@@ -153,14 +184,33 @@ def inject_kv(cfg, caches, batch_idx: int, kv: KVCache):
 # ---------------------------------------------------------------------------
 # Quality evaluation
 # ---------------------------------------------------------------------------
-@lru_cache(maxsize=4)
+@lru_cache(maxsize=8)
 def _jitted_steps(cfg_name: str, seq: int, batch: int, max_len: int):
+    """Returns (prefill, decode, arena_decode), all jitted.
+
+    ``arena_decode(params, caches, tokens, pos, mask)`` is the masked
+    batched decode of the slot arena (DESIGN.md §9): ``tokens`` (B, 1),
+    ``pos`` (B,) per-slot next cache positions, ``mask`` (B,) live-slot
+    flags.  Every slot advances in ONE model call; parked rows (mask
+    False — free slots and this iteration's fresh prefills) are pinned to
+    the scratch position ``max_len - 1``, which no live query position
+    ever attends to, so their cache writes are inert.  The next token per
+    slot comes from an on-device argmax; the caller pulls the (B,) token
+    vector back once per iteration.
+    """
     from repro.models import decode_step, prefill
 
     cfg = get_config(cfg_name)
     pre = jax.jit(lambda p, b: prefill(cfg, p, b, max_len=max_len))
     dec = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
-    return pre, dec
+
+    def _arena(p, c, t, pos, mask):
+        pos = jnp.where(mask, pos, max_len - 1).astype(jnp.int32)
+        logits, c = decode_step(cfg, p, c, t, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return jnp.where(mask, nxt, 0), c
+
+    return pre, dec, jax.jit(_arena)
 
 
 def _prompts_for(workload: str, n: int, seq: int, seed: int
@@ -221,7 +271,7 @@ def evaluate_quality(
         return {w: 1.0 for w in workloads}
     cfg, params = ref if ref is not None else get_reference_model()
     gen_budget = decode_tokens + 2
-    pre, dec = _jitted_steps(cfg.name, seq, n_prompts, seq + gen_budget)
+    pre, dec, _ = _jitted_steps(cfg.name, seq, n_prompts, seq + gen_budget)
     pipe = CompressionPipeline(strategy, head_scores=head_scores)
 
     out: Dict[str, float] = {}
@@ -250,7 +300,7 @@ def calibrate_head_scores(workload: str = "mixed", n_prompts: int = 4,
                           ) -> np.ndarray:
     """Data-driven retrieval-head scores (L, H) from real model KV."""
     cfg, params = ref if ref is not None else get_reference_model()
-    pre, _ = _jitted_steps(cfg.name, seq, n_prompts, seq + 4)
+    pre, _, _ = _jitted_steps(cfg.name, seq, n_prompts, seq + 4)
     ws = list(WORKLOADS) if workload == "mixed" else [workload]
     scores = []
     for wi, w in enumerate(ws):

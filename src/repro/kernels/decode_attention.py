@@ -23,9 +23,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _attn_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
-                 m_scr, l_scr, acc_scr, *, bits: int, group: int,
-                 kv_len: int, block_s: int, sm_scale: float):
+def _attn_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, *rest,
+                 bits: int, group: int, kv_len: Optional[int],
+                 block_s: int, sm_scale: float):
+    if kv_len is None:
+        # Multi-slot decode: per-row valid lengths streamed in via SMEM —
+        # each batch program masks against its own slot's length.
+        kvl_ref, o_ref, m_scr, l_scr, acc_scr = rest
+        kv_len = kvl_ref[pl.program_id(0)]
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     s_idx = pl.program_id(2)
     n_s = pl.num_programs(2)
 
@@ -88,33 +95,49 @@ def decode_attention(
     *,
     bits: int = 8,
     group: int = 64,
-    kv_len: Optional[int] = None,
+    kv_len=None,           # None | int | (B,) int32 per-slot valid lengths
     block_s: int = 256,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    """Quantized flash-decode attention.
+
+    ``kv_len`` as a static int masks every row at the same length (the
+    single-sequence decode of PR 1); a (B,) int32 array is the slot-arena
+    path — each batch row is one serving slot at its own ragged length,
+    masked inside the kernel from an SMEM-resident length vector.
+    """
     b, hkv, gq, d = q.shape
     s = k_codes.shape[2]
-    kv_len = s if kv_len is None else kv_len
     bs = min(block_s, s)
     assert s % bs == 0, (s, bs)
     cw = k_codes.shape[3]
     ng = k_scale.shape[3]
     sm_scale = 1.0 / math.sqrt(d)
 
+    multi_slot = kv_len is not None and jnp.ndim(kv_len) == 1
+    static_len = s if kv_len is None else (None if multi_slot else int(kv_len))
+
     kernel = functools.partial(
-        _attn_kernel, bits=bits, group=group, kv_len=kv_len, block_s=bs,
+        _attn_kernel, bits=bits, group=group, kv_len=static_len, block_s=bs,
         sm_scale=sm_scale)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, gq, d), lambda i, j, k: (i, j, 0, 0)),
+        pl.BlockSpec((1, 1, bs, cw), lambda i, j, k: (i, j, k, 0)),
+        pl.BlockSpec((1, 1, bs, ng), lambda i, j, k: (i, j, k, 0)),
+        pl.BlockSpec((1, 1, bs, cw), lambda i, j, k: (i, j, k, 0)),
+        pl.BlockSpec((1, 1, bs, ng), lambda i, j, k: (i, j, k, 0)),
+    ]
+    args = [q, k_codes, k_scale, v_codes, v_scale]
+    if multi_slot:
+        assert kv_len.shape == (b,), (kv_len.shape, b)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        args.append(jnp.asarray(kv_len, jnp.int32))
 
     return pl.pallas_call(
         kernel,
         grid=(b, hkv, s // bs),
-        in_specs=[
-            pl.BlockSpec((1, 1, gq, d), lambda i, j, k: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, bs, cw), lambda i, j, k: (i, j, k, 0)),
-            pl.BlockSpec((1, 1, bs, ng), lambda i, j, k: (i, j, k, 0)),
-            pl.BlockSpec((1, 1, bs, cw), lambda i, j, k: (i, j, k, 0)),
-            pl.BlockSpec((1, 1, bs, ng), lambda i, j, k: (i, j, k, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, gq, d), lambda i, j, k: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hkv, gq, d), q.dtype),
         scratch_shapes=[
@@ -123,4 +146,4 @@ def decode_attention(
             pltpu.VMEM((gq, d), jnp.float32),   # output accumulator
         ],
         interpret=interpret,
-    )(q, k_codes, k_scale, v_codes, v_scale)
+    )(*args)

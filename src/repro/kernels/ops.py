@@ -52,14 +52,39 @@ def hadamard_op(x, block_tokens: int = 256, interpret: Optional[bool] = None):
 
 @functools.partial(jax.jit, static_argnames=("bits", "group", "kv_len",
                                              "block_s", "interpret"))
-def decode_attention_op(q, k_codes, k_scale, v_codes, v_scale, bits: int = 8,
-                        group: int = 64, kv_len: Optional[int] = None,
-                        block_s: int = 256, interpret: Optional[bool] = None):
-    """Quantized flash-decode attention (see decode_attention.py)."""
-    itp = _default_interpret() if interpret is None else interpret
+def _decode_attention_static(q, k_codes, k_scale, v_codes, v_scale, bits,
+                             group, kv_len, block_s, interpret):
     return _decode_attention(q, k_codes, k_scale, v_codes, v_scale, bits=bits,
                              group=group, kv_len=kv_len, block_s=block_s,
-                             interpret=itp)
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "block_s",
+                                             "interpret"))
+def _decode_attention_multi_slot(q, k_codes, k_scale, v_codes, v_scale,
+                                 kv_lens, bits, group, block_s, interpret):
+    return _decode_attention(q, k_codes, k_scale, v_codes, v_scale, bits=bits,
+                             group=group, kv_len=kv_lens, block_s=block_s,
+                             interpret=interpret)
+
+
+def decode_attention_op(q, k_codes, k_scale, v_codes, v_scale, bits: int = 8,
+                        group: int = 64, kv_len=None,
+                        block_s: int = 256, interpret: Optional[bool] = None):
+    """Quantized flash-decode attention (see decode_attention.py).
+
+    ``kv_len``: None | int | (B,) int32 — the vector form is the masked
+    multi-slot (slot-arena) decode with per-row ragged lengths, traced
+    (not static) so slot churn never recompiles."""
+    itp = _default_interpret() if interpret is None else interpret
+    if kv_len is not None and jnp.ndim(kv_len) == 1:
+        return _decode_attention_multi_slot(
+            q, k_codes, k_scale, v_codes, v_scale,
+            jnp.asarray(kv_len, jnp.int32), bits=bits, group=group,
+            block_s=block_s, interpret=itp)
+    return _decode_attention_static(q, k_codes, k_scale, v_codes, v_scale,
+                                    bits=bits, group=group, kv_len=kv_len,
+                                    block_s=block_s, interpret=itp)
 
 
 # Re-export oracles for test convenience.

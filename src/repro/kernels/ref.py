@@ -75,9 +75,11 @@ def decode_attention_ref(
     v_codes: jnp.ndarray,  # (B, Hkv, S, D) int8
     v_scale: jnp.ndarray,  # (B, Hkv, S, D/group) f32
     group: int,
-    kv_len: Optional[jnp.ndarray] = None,  # scalar: valid cache slots
+    kv_len: Optional[jnp.ndarray] = None,  # scalar, or (B,) per-slot lengths
 ) -> jnp.ndarray:
-    """Attention of one new token against a quantized KV cache."""
+    """Attention of one new token against a quantized KV cache.  A (B,)
+    ``kv_len`` masks each batch row at its own slot length (the ragged
+    slot-arena decode)."""
     b, hkv, gq, d = q.shape
     s = k_codes.shape[2]
     k = dequantize_ref(k_codes, k_scale, group)  # (B,Hkv,S,D)
@@ -85,8 +87,9 @@ def decode_attention_ref(
     scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k)
     scores = scores / math.sqrt(d)
     if kv_len is not None:
-        mask = jnp.arange(s) < kv_len
-        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        lens = jnp.atleast_1d(jnp.asarray(kv_len))          # (1,) or (B,)
+        mask = jnp.arange(s)[None, :] < lens[:, None]       # (B|1, S)
+        scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", probs, v)
     return out.astype(q.dtype)

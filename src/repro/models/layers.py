@@ -120,14 +120,29 @@ def _mask_value():
 
 def attention_scores_mask(q_pos, k_pos, causal: bool, window: int,
                           kv_valid: Optional[jnp.ndarray]):
-    """(..., Sq, Sk) boolean validity mask from position vectors."""
-    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), dtype=bool)
+    """Boolean validity mask from position vectors.
+
+    Unbatched ``q_pos`` (Sq,) with scalar ``kv_valid`` yields (Sq, Sk); a
+    batched ``q_pos`` (B, Sq) or per-row ``kv_valid`` (B,) yields
+    (B, Sq, Sk) — the slot-arena decode path, where every slot sits at its
+    own position in its own cache row.
+    """
+    q = jnp.asarray(q_pos)
+    batched = q.ndim == 2 or (kv_valid is not None
+                              and jnp.ndim(kv_valid) == 1)
+    if batched and q.ndim == 1:
+        q = q[None]
+    qp = q[..., :, None]                                   # (..., Sq, 1)
+    kp = k_pos[None, None, :] if batched else k_pos[None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape[:-1] + (k_pos.shape[-1],),
+                                      kp.shape), dtype=bool)
     if causal:
-        m &= k_pos[None, :] <= q_pos[:, None]
+        m = m & (kp <= qp)
     if window and window > 0:
-        m &= k_pos[None, :] > (q_pos[:, None] - window)
+        m = m & (kp > (qp - window))
     if kv_valid is not None:
-        m &= k_pos[None, :] < kv_valid
+        kv = jnp.asarray(kv_valid)
+        m = m & (kp < (kv[:, None, None] if kv.ndim == 1 else kv))
     return m
 
 
@@ -169,7 +184,8 @@ def multihead_attention(
         scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
         scores = _softcap(scores, softcap)
         mask = attention_scores_mask(q_positions, k_positions, causal, window, kv_valid)
-        scores = jnp.where(mask[None, None, None], scores, _mask_value())
+        mask = mask if mask.ndim == 3 else mask[None]  # (B|1, Sq, Sk)
+        scores = jnp.where(mask[:, None, None], scores, _mask_value())
         if return_stats:
             m = scores.max(axis=-1)
             l = jnp.exp(scores - m[..., None]).sum(axis=-1)
@@ -196,7 +212,8 @@ def multihead_attention(
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc).astype(jnp.float32) * scale
         s = _softcap(s, softcap)
         mask = attention_scores_mask(q_positions, kp, causal, window, kv_valid)
-        s = jnp.where(mask[None, None, None], s, _mask_value())
+        mask = mask if mask.ndim == 3 else mask[None]
+        s = jnp.where(mask[:, None, None], s, _mask_value())
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -287,7 +304,11 @@ def apply_attention(
             g = cfg.num_heads // cfg.kv_heads
             smax = cache["k"].shape[1]
             k_pos = jnp.arange(smax, dtype=jnp.int32)
-            q_pos = jnp.full((s,), cache_pos, dtype=jnp.int32)
+            if jnp.ndim(cache_pos) == 1:
+                # Slot-arena decode: every row sits at its own position.
+                q_pos = cache_pos.astype(jnp.int32)[:, None]  # (B, 1)
+            else:
+                q_pos = jnp.full((s,), cache_pos, dtype=jnp.int32)
             out_old, m_old, l_old = multihead_attention(
                 q, cache["k"], cache["v"], q_positions=q_pos,
                 k_positions=k_pos, causal=True, window=window,

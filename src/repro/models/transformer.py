@@ -259,7 +259,17 @@ def _run_stack(params, cfg: ModelConfig, plan: StackPlan, x, *, positions,
 
 def _merge_decode_updates(new_caches, caches, cache_pos):
     """Write the per-layer (k_new, v_new) token slices into the full cache
-    buffers with ONE dynamic-update-slice per (stacked) buffer."""
+    buffers with ONE dynamic-update-slice per (stacked) buffer.
+
+    A vector ``cache_pos`` (B,) writes each batch row at its own position
+    (slot-arena decode): one dynamic-update-slice per row via vmap, which
+    XLA lowers to a scatter over the batch axis."""
+    per_slot = jnp.ndim(cache_pos) == 1
+
+    def _row_write(b_old, upd, p):
+        # b_old (S, H, D); upd (1, H, D); p scalar
+        return jax.lax.dynamic_update_slice(b_old, upd, (p,) + (0,) * (b_old.ndim - 1))
+
     def _merge(sub, old, stacked: bool):
         out = {}
         for name, c in sub.items():
@@ -267,13 +277,18 @@ def _merge_decode_updates(new_caches, caches, cache_pos):
                 buf = {}
                 for key, nk in (("k", "k_new"), ("v", "v_new")):
                     b_old = old[name][key]
-                    upd = c[nk]
-                    if stacked:
-                        idx = (0, 0, cache_pos, 0, 0)
+                    upd = c[nk].astype(b_old.dtype)
+                    if per_slot:
+                        row = jax.vmap(_row_write)
+                        if stacked:  # (N, B, S, H, D)
+                            buf[key] = jax.vmap(
+                                lambda bo, up: row(bo, up, cache_pos))(b_old, upd)
+                        else:        # (B, S, H, D)
+                            buf[key] = row(b_old, upd, cache_pos)
                     else:
-                        idx = (0, cache_pos, 0, 0)
-                    buf[key] = jax.lax.dynamic_update_slice(
-                        b_old, upd.astype(b_old.dtype), idx)
+                        idx = ((0, 0, cache_pos, 0, 0) if stacked
+                               else (0, cache_pos, 0, 0))
+                        buf[key] = jax.lax.dynamic_update_slice(b_old, upd, idx)
                 out[name] = buf
             else:
                 out[name] = c  # mamba state: carried whole (it is small)
@@ -412,7 +427,9 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int):
 
 
 def decode_step(cfg: ModelConfig, params, caches, tokens, pos):
-    """One decode step. tokens (B, 1); pos scalar int32 (next slot index)."""
+    """One decode step. tokens (B, 1); pos scalar int32 (next slot index),
+    or (B,) int32 for the batched slot arena, where every cache row sits at
+    its own position (ragged continuous-batching decode)."""
     plan = plan_stack(cfg)
     xattn_kv = None
     if cfg.encoder_decoder:
@@ -422,10 +439,13 @@ def decode_step(cfg: ModelConfig, params, caches, tokens, pos):
         self_caches = caches
     x = L.embed_tokens(params["embed"], tokens).astype(COMPUTE_DTYPE)
     bsz = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
     if cfg.mrope:
-        positions = jnp.broadcast_to(pos.astype(jnp.int32), (3, bsz, 1))
+        positions = jnp.broadcast_to(
+            pos[None, :, None] if pos.ndim == 1 else pos, (3, bsz, 1))
     else:
-        positions = jnp.broadcast_to(pos.astype(jnp.int32), (bsz, 1))
+        positions = (pos[:, None] if pos.ndim == 1
+                     else jnp.broadcast_to(pos, (bsz, 1)))
     x, new_caches, _ = _run_stack(params, cfg, plan, x, positions=positions,
                                   mode="decode", caches=self_caches,
                                   cache_pos=pos, xattn_kv=xattn_kv)

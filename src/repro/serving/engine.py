@@ -11,12 +11,21 @@ A faithful miniature of the paper's vLLM integration, in two granularities:
   objects through the shared :class:`~repro.serving.scheduler.ContinuousScheduler`
   (admission control + SLO-class priorities), and each ``step()`` is one
   iteration — admit up to ``max_prefills_per_step`` prefill/fetch slots,
-  then advance every in-flight decode slot by one token.  Prompts whose
+  then advance every in-flight decode slot by one token with a SINGLE
+  jitted batched decode over the fixed-capacity slot arena.  Prompts whose
   prefix is already in the :class:`~repro.serving.kvstore.PrefixKVStore`
   are served from the pool (fetch real compressed bytes -> decompress ->
-  inject), reproducing the paper's KV-disaggregated TTFT path; misses run
-  a real prefill and write the compressed prefix back to the pool with the
-  profile the Service-Aware Controller picked for the request.
+  inject into the request's arena slot), reproducing the paper's
+  KV-disaggregated TTFT path; misses run a real prefill into the slot and
+  write the compressed prefix back to the pool with the profile the
+  Service-Aware Controller picked for the request.
+
+The slot arena is ONE cache pytree with a leading slot axis of size
+``max_slots``.  Each slot owns a cache row, a per-slot position, and a
+live flag; the batched decode step masks free/fresh rows (parked at a
+scratch position) instead of branching per slot, so decode wall-clock is
+one model call per iteration regardless of occupancy — the continuous-
+batching amortization the per-slot loop of PR 1 lacked.
 
 Every byte on the "wire" is real pipeline output.  Compute time is either
 measured wall-clock or (for deterministic benchmarks) modelled from
@@ -40,6 +49,7 @@ from repro.core.quality import (
     _greedy_decode,
     _jitted_steps,
     _prompts_for,
+    copy_cache_slot,
     extract_kv,
     get_reference_model,
     inject_kv,
@@ -101,7 +111,7 @@ class DisaggregatedEngine:
         self.decode_tokens = decode_tokens
         self.batch = batch
         self.estimator = GoodputEstimator()
-        self._pre, self._dec = _jitted_steps(
+        self._pre, self._dec, _ = _jitted_steps(
             self.cfg.name, seq, batch, seq + decode_tokens + 2)
         self.tok = ByteTokenizer()
 
@@ -156,6 +166,7 @@ class DisaggregatedEngine:
         t_decode = time.perf_counter() - t0
 
         agreement = float((ref_toks == test_toks).mean())
+        # One-shot PD: compress/comm/decompress ARE the critical path.
         observed = t_compress + t_comm + t_decompress + ctx.t_model
         if self.controller is not None and decision is not None:
             self.controller.observe(ctx, decision, observed)
@@ -204,6 +215,7 @@ class ServedRequest:
     arrival: float
     done: float
     ttft: float
+    slot: int = -1                # arena slot that served the request
     # Critical-path decomposition; sums exactly to jct.  Keys: queue,
     # prefill | comm+decompress, decode, stall (time spent waiting on the
     # iteration's other stream, e.g. head-of-line prefill blocking decode).
@@ -219,8 +231,11 @@ class ServedRequest:
 
 @dataclass
 class _Slot:
+    """Host-side bookkeeping for one occupied arena slot (the device-side
+    state — cache row, position, live flag — lives in the arena arrays)."""
+
     req: Request
-    caches: Any                   # batch-1 cache pytree
+    idx: int                      # arena slot index (row in the cache pytree)
     toks: List[int]               # generated tokens (incl. first)
     pool_hit: bool
     profile: str
@@ -228,11 +243,16 @@ class _Slot:
     breakdown: Dict[str, float]
     ttft: float
     pool_write: float = 0.0       # off-path compress+write cost (misses)
+    # Controller feedback deferred to _finish so the bandit observes the
+    # request's realized critical-path latency (= breakdown sum = jct),
+    # not the off-critical-path pool write.
+    ctx: Optional[ServiceContext] = None
+    decision: Optional[Decision] = None
 
 
 class ServingRuntime:
     """Iteration-level (continuous-batching) serving of the tiny reference
-    model against a compressed prefix-KV pool."""
+    model against a compressed prefix-KV pool, on a batched slot arena."""
 
     def __init__(self, controller: Optional[ServiceAwareController] = None,
                  static_profile: Optional[Profile] = None,
@@ -251,9 +271,12 @@ class ServingRuntime:
         self.trace = trace or BandwidthTrace.constant(1e9)
         self.estimator = GoodputEstimator(initial=self.trace.at(0.0))
         self.model_cfg, self.params = get_reference_model()
-        max_len = self.cfg.seq + self.cfg.decode_tokens + 2
-        self._pre1, self._dec1 = _jitted_steps(
-            self.model_cfg.name, self.cfg.seq, 1, max_len)
+        self.max_len = self.cfg.seq + self.cfg.decode_tokens + 2
+        self._pre1, _, _ = _jitted_steps(
+            self.model_cfg.name, self.cfg.seq, 1, self.max_len)
+        self.n_slots = self.scheduler.cfg.max_slots
+        _, _, self._dec_arena = _jitted_steps(
+            self.model_cfg.name, self.cfg.seq, self.n_slots, self.max_len)
         self.tok = ByteTokenizer()
         self.clock = 0.0
         self.steps = 0
@@ -262,6 +285,24 @@ class ServingRuntime:
         self._slots: Dict[int, _Slot] = {}
         self._prompts: Dict[int, np.ndarray] = {}
         self._next_rid = 0
+        # ---- device-side slot arena (lazily materialised) ----
+        self._arena: Any = None          # cache pytree, leading axis n_slots
+        self._positions = np.zeros(self.n_slots, np.int32)  # next write pos
+        self._last_tok = np.zeros(self.n_slots, np.int32)   # last emitted tok
+
+    # ------------------------------------------------------------------
+    def _ensure_arena(self):
+        if self._arena is None:
+            from repro.models.transformer import init_cache, plan_stack
+            plan = plan_stack(self.model_cfg)
+            if any(s.kind != "attn"
+                   for s in plan.prefix_specs + plan.period_specs):
+                raise NotImplementedError(
+                    "slot arena masking assumes attention-only caches "
+                    "(SSM states advance unmasked)")
+            self._arena = init_cache(self.model_cfg, self.n_slots,
+                                     self.max_len)
+        return self._arena
 
     # ------------------------------------------------------------------
     def submit(self, workload: str, t_slo: float = 0.0, q_min: float = 0.97,
@@ -291,17 +332,14 @@ class ServingRuntime:
         return rid
 
     # ------------------------------------------------------------------
-    def _empty_caches(self):
-        from repro.models.transformer import init_cache
-        return init_cache(self.model_cfg, 1,
-                          self.cfg.seq + self.cfg.decode_tokens + 2)
-
-    # ------------------------------------------------------------------
     def _start_request(self, req: Request, now: float) -> float:
-        """Prefill-or-fetch for one admitted request.  Returns the virtual
+        """Prefill-or-fetch one admitted request into its arena slot
+        (``req.slot``, assigned by the scheduler).  Returns the virtual
         cost this slot added to the iteration."""
         tokens = self._prompts[req.rid]
         key = req.prefix_key
+        idx = req.slot
+        arena = self._ensure_arena()
         # full=True: a partial (block-aligned) prefix hit would leave the
         # uncovered prompt suffix without KV — the runtime has no top-up
         # prefill, so only a full-coverage entry counts as a pool hit.
@@ -309,7 +347,8 @@ class ServingRuntime:
         bd: Dict[str, float] = {"queue": now - req.arrival}
 
         if entry is not None:
-            # ---- pool hit: fetch real compressed bytes, decompress, inject
+            # ---- pool hit: fetch real compressed bytes, decompress, and
+            # inject straight into the request's arena slot
             comp, first = entry.payload
             t_comm = self.trace.transfer_time(now, entry.wire_bytes)
             self.estimator.observe(entry.wire_bytes, t_comm)
@@ -320,19 +359,20 @@ class ServingRuntime:
             # Cache injection is host-side bookkeeping of the miniature
             # (the cold path's equivalent writes happen inside prefill),
             # so it is not billed to the virtual clock.
-            caches = inject_kv(self.model_cfg, self._empty_caches(), 0, kv)
+            self._arena = inject_kv(self.model_cfg, arena, idx, kv)
             cost = self.cfg.pool_fetch_overhead + t_comm + t_decompress
             bd.update(comm=self.cfg.pool_fetch_overhead + t_comm,
                       decompress=t_decompress)
-            slot = _Slot(req=req, caches=caches, toks=[int(first)],
+            slot = _Slot(req=req, idx=idx, toks=[int(first)],
                          pool_hit=True,
                          profile=comp.strategy.short_name(),
                          wire_bytes=int(entry.wire_bytes), breakdown=bd,
                          ttft=(now + cost) - req.arrival)
-            self._slots[req.rid] = slot
+            self._occupy(slot, int(first))
             return cost
 
-        # ---- miss: real prefill, then write the compressed prefix back
+        # ---- miss: real prefill into the slot, then write the compressed
+        # prefix back to the pool
         t0 = time.perf_counter()
         logits, caches = self._pre1(self.params, {"tokens": tokens[None, :]})
         jax.block_until_ready(logits)
@@ -341,6 +381,7 @@ class ServingRuntime:
                      if self.cfg.prefill_tok_s else t_wall)
         first = int(np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))[0])
         bd.update(prefill=t_prefill)
+        self._arena = copy_cache_slot(self.model_cfg, arena, caches, idx)
 
         kv = extract_kv(self.model_cfg, caches, 0, upto=self.cfg.seq)
         ctx = ServiceContext(workload=req.workload,
@@ -354,22 +395,28 @@ class ServingRuntime:
         comp = pipe.compress(kv)
         t_compress = time.perf_counter() - t0
         wire = comp.total_bytes()
-        # The pool write crosses the wire off the request's critical path.
+        # The pool write crosses the wire off the request's critical path;
+        # its cost is booked to pool_write, and the controller observes the
+        # request's critical-path latency at _finish instead.
         t_comm = self.trace.transfer_time(now + t_prefill + t_compress, wire)
         self.estimator.observe(wire, t_comm)
         self.store.put(key, (comp, first), wire, kv_bytes=kv.nbytes_wire(),
                        workload=req.workload, slo_class=req.slo_class,
                        now=now + t_prefill + t_compress + t_comm)
-        if self.controller is not None and decision is not None:
-            self.controller.observe(ctx, decision,
-                                    t_compress + t_comm + ctx.t_model)
-        slot = _Slot(req=req, caches=caches, toks=[first], pool_hit=False,
+        slot = _Slot(req=req, idx=idx, toks=[first], pool_hit=False,
                      profile=profile.strategy.short_name(),
                      wire_bytes=int(wire), breakdown=bd,
                      ttft=(now + t_prefill) - req.arrival,
-                     pool_write=t_compress + t_comm)
-        self._slots[req.rid] = slot
+                     pool_write=t_compress + t_comm,
+                     ctx=ctx, decision=decision)
+        self._occupy(slot, first)
         return t_prefill
+
+    # ------------------------------------------------------------------
+    def _occupy(self, slot: _Slot, first: int) -> None:
+        self._slots[slot.req.rid] = slot
+        self._positions[slot.idx] = self.cfg.seq
+        self._last_tok[slot.idx] = first
 
     # ------------------------------------------------------------------
     def _finish(self, slot: _Slot, now: float) -> None:
@@ -380,14 +427,19 @@ class ServingRuntime:
         req.chosen = slot.profile
         req.breakdown = slot.breakdown
         req.slo_violated = req.t_slo > 0 and slot.ttft > req.t_slo
+        if self.controller is not None and slot.decision is not None:
+            # Residual-bandit feedback: the realized critical-path latency,
+            # exactly the ServedRequest breakdown sum (== jct).
+            self.controller.observe(slot.ctx, slot.decision,
+                                    sum(slot.breakdown.values()))
         self.completed.append(ServedRequest(
             rid=req.rid, workload=req.workload, slo_class=req.slo_class,
             text=self.tok.decode(toks), tokens=toks, profile=slot.profile,
             pool_hit=slot.pool_hit, kv_bytes=int(req.kv_bytes),
             wire_bytes=slot.wire_bytes, arrival=req.arrival, done=now,
-            ttft=slot.ttft, breakdown=slot.breakdown,
+            ttft=slot.ttft, slot=slot.idx, breakdown=slot.breakdown,
             t_pool_write=slot.pool_write))
-        self.scheduler.finish(req.rid)
+        self.scheduler.finish(req.rid)   # releases the arena slot id
         del self._slots[req.rid]
         self._prompts.pop(req.rid, None)
 
@@ -395,7 +447,8 @@ class ServingRuntime:
     def step(self) -> Dict[str, float]:
         """One scheduler iteration: admit prefill/fetch slots, then advance
         every *previously running* decode slot by one token (a request's
-        first decode token comes the iteration after its prefill)."""
+        first decode token comes the iteration after its prefill) — all
+        slots in ONE masked batched decode call."""
         now = self.clock
         started: List[Tuple[_Slot, float]] = []   # (slot, start-work end offset)
         offset = 0.0
@@ -405,18 +458,27 @@ class ServingRuntime:
             started.append((self._slots[req.rid], offset))
             new_rids.add(req.rid)
 
-        # Iteration-level decode: every in-flight slot emits one token.
+        # Iteration-level decode: every in-flight slot emits one token via
+        # a single jitted arena step (per-slot positions, on-device argmax,
+        # one (B,) token pull per iteration — no per-slot host round-trips).
         decode_wall = 0.0
         active = [s for rid, s in self._slots.items() if rid not in new_rids]
-        for slot in active:
-            pos = self.cfg.seq + len(slot.toks) - 1
-            tok = jnp.asarray([[slot.toks[-1]]], jnp.int32)
+        if active:
+            mask = np.zeros(self.n_slots, bool)
+            for slot in active:
+                mask[slot.idx] = True
             t0 = time.perf_counter()
-            logits, slot.caches = self._dec1(self.params, slot.caches, tok,
-                                             jnp.asarray(pos, jnp.int32))
-            nxt = int(np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))[0])
-            decode_wall += time.perf_counter() - t0
-            slot.toks.append(nxt)
+            nxt, self._arena = self._dec_arena(
+                self.params, self._ensure_arena(),
+                jnp.asarray(self._last_tok[:, None]),
+                jnp.asarray(self._positions), jnp.asarray(mask))
+            nxt = np.asarray(nxt)        # the step's single host sync
+            decode_wall = time.perf_counter() - t0
+            for slot in active:
+                t = int(nxt[slot.idx])
+                slot.toks.append(t)
+                self._last_tok[slot.idx] = t
+                self._positions[slot.idx] += 1
         decode_cost = 0.0
         if active:
             decode_cost = (1.0 / self.cfg.decode_tok_s
@@ -450,8 +512,12 @@ class ServingRuntime:
 
     # ------------------------------------------------------------------
     def run(self, max_steps: int = 10_000) -> List[ServedRequest]:
-        """Step until every admitted request completed (or max_steps)."""
-        while not self.scheduler.idle and self.steps < max_steps:
+        """Step until every admitted request completed, or until
+        ``max_steps`` iterations *from this call* — the budget is relative,
+        so a second ``run()`` on a long-lived runtime keeps making
+        progress instead of returning against the cumulative counter."""
+        start = self.steps
+        while not self.scheduler.idle and self.steps - start < max_steps:
             self.step()
         return self.completed
 

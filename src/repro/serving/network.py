@@ -29,7 +29,6 @@ class BandwidthTrace:
 
     def __post_init__(self):
         assert self.times[0] == 0.0 and len(self.times) == len(self.values)
-        self._rng = np.random.default_rng(self.seed)
 
     @staticmethod
     def constant(bandwidth: float) -> "BandwidthTrace":
@@ -45,14 +44,25 @@ class BandwidthTrace:
         i = bisect_right(self.times, t) - 1
         return self.values[max(i, 0)]
 
+    def _jitter_mult(self, start: float, nbytes: float) -> float:
+        """Per-transfer multiplier derived deterministically from
+        (seed, start, nbytes): identical transfers get identical times
+        across calls and replays, and a trace shared between the runtime
+        and the simulator cannot cross-contaminate either's stream."""
+        if self.jitter <= 0:
+            return 1.0
+        key = (self.seed,
+               int(np.float64(start).view(np.uint64)),
+               int(np.float64(nbytes).view(np.uint64)))
+        rng = np.random.default_rng(key)
+        return float(np.exp(rng.normal(0.0, self.jitter)))
+
     def transfer_time(self, start: float, nbytes: float) -> float:
         """Time to push nbytes starting at `start`, integrating over the
         trace (with optional per-transfer jitter)."""
         if nbytes <= 0:
             return 0.0
-        mult = 1.0
-        if self.jitter > 0:
-            mult = float(np.exp(self._rng.normal(0.0, self.jitter)))
+        mult = self._jitter_mult(start, nbytes)
         remaining = nbytes
         t = start
         i = bisect_right(self.times, t) - 1

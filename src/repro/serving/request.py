@@ -27,6 +27,11 @@ class Request:
     # store (not the prefix_hit flag) decides pool hits.
     prefix_key: Optional[Tuple[int, ...]] = None
 
+    # Arena slot id while in flight (assigned by ContinuousScheduler on
+    # admission to a running slot, released on finish; None while waiting
+    # and in the event-driven simulator, which has no physical slots).
+    slot: Optional[int] = None
+
     # ---- outcome fields (filled by the simulator) ----
     done: float = 0.0
     ttft: float = 0.0

@@ -79,6 +79,10 @@ class ContinuousScheduler:
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}
         self.finished: List[Request] = []
+        # Physical arena slot ids, recycled LIFO so a hot slot's cache row
+        # is reused first.  len(running) <= max_slots keeps this non-empty
+        # whenever next_prefills admits.
+        self._free_slots: List[int] = list(range(self.cfg.max_slots))[::-1]
 
     # ------------------------------------------------------------------
     @property
@@ -122,7 +126,8 @@ class ContinuousScheduler:
     def next_prefills(self, now: float) -> List[Request]:
         """The iteration's prefill admissions: up to ``max_prefills_per_step``
         waiting requests, bounded by free slots.  Each returned request is
-        moved into a running slot."""
+        moved into a running slot and carries its arena slot id in
+        ``req.slot``."""
         free = self.cfg.max_slots - len(self.running)
         n = min(self.cfg.max_prefills_per_step, free, len(self.waiting))
         out: List[Request] = []
@@ -130,6 +135,7 @@ class ContinuousScheduler:
             req = self.pop_next(now)
             if req is None:
                 break
+            req.slot = self._free_slots.pop()
             self.running[req.rid] = req
             out.append(req)
         return out
@@ -137,4 +143,6 @@ class ContinuousScheduler:
     def finish(self, rid: int) -> None:
         req = self.running.pop(rid, None)
         if req is not None:
+            if req.slot is not None:
+                self._free_slots.append(req.slot)
             self.finished.append(req)

@@ -1,0 +1,92 @@
+"""The pinned continuous-batching scenario used for token-exact parity.
+
+The exact same driver ran against the PR-1 per-slot decode loop to produce
+``tests/fixtures/pr1_runtime_tokens.json`` (pool hit/miss mix, staggered
+admissions, out_tokens shorter than the decode budget for some requests);
+the batched slot-arena runtime must reproduce those tokens bit-for-bit.
+Only public ServingRuntime API is used so the driver is implementation-
+agnostic.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+FIXTURE = Path(__file__).parent / "fixtures" / "pr1_runtime_tokens.json"
+
+# (workload, slo_class, prompt_seed, out_tokens, steps-before-next-submit)
+SCENARIO = [
+    ("qalike", "standard", 0, None, 1),
+    ("codelike", "interactive", 1, 4, 0),
+    ("mathlike", "batch", 2, None, 2),
+    ("qalike", "standard", 0, None, 1),      # pool hit on rid 0's prefix
+    ("summlike", "standard", 3, 3, 0),
+    ("codelike", "interactive", 1, None, 1),  # pool hit on rid 1's prefix
+    ("mathlike", "batch", 2, 5, 0),           # pool hit on rid 2's prefix
+    ("qalike", "batch", 4, None, 2),
+]
+
+
+def params_digest(params) -> str:
+    """Stable digest of the reference-model weights (fixture validity key)."""
+    import jax
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(params):
+        h.update(np.asarray(leaf, np.float32).tobytes())
+    return h.hexdigest()[:16]
+
+
+def build_runtime(reference_model=None):
+    from repro.core.profiles import Profile
+    from repro.core.strategy import StrategyConfig
+    from repro.serving import BandwidthTrace, GBPS, SchedulerConfig
+    from repro.serving.engine import RuntimeConfig, ServingRuntime
+
+    profile = Profile(
+        StrategyConfig(quantizer="uniform", key_bits=8, value_bits=8,
+                       granularity="per_channel"),
+        cr=2.0, s_enc=5e8, s_dec=5e8)
+    rt = ServingRuntime(
+        static_profile=profile,
+        config=RuntimeConfig(seq=64, decode_tokens=6, prefill_tok_s=2000.0,
+                             decode_tok_s=500.0),
+        trace=BandwidthTrace.constant(1 * GBPS),
+        scheduler=SchedulerConfig(max_slots=6, max_prefills_per_step=2,
+                                  max_queue=32))
+    if reference_model is not None:
+        rt.model_cfg, rt.params = reference_model
+    return rt
+
+
+def run_scenario(rt) -> Dict[str, Dict]:
+    """Drive the scenario; returns {rid: {workload, pool_hit, tokens}}."""
+    for w, slo_class, seed, out_tokens, steps_after in SCENARIO:
+        rt.submit(w, slo_class=slo_class, prompt_seed=seed,
+                  out_tokens=out_tokens)
+        for _ in range(steps_after):
+            rt.step()
+    rt.run()
+    return {
+        str(r.rid): {"workload": r.workload, "pool_hit": bool(r.pool_hit),
+                     "tokens": [int(t) for t in r.tokens]}
+        for r in rt.completed
+    }
+
+
+def capture_fixture() -> Dict:
+    """Regenerate the fixture payload from the current runtime."""
+    rt = build_runtime()
+    outputs = run_scenario(rt)
+    return {"params_digest": params_digest(rt.params), "outputs": outputs}
+
+
+if __name__ == "__main__":
+    payload = capture_fixture()
+    FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+    FIXTURE.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    print(f"wrote {FIXTURE} ({len(payload['outputs'])} requests, "
+          f"digest {payload['params_digest']})")

@@ -80,3 +80,29 @@ def test_violation_cooldown_quarantines():
         bandit.update(0, bad, ctx, observed_latency=1.0)
     chosen = bandit.select(0, [bad, good], ctx)
     assert chosen is good
+
+
+def test_exploration_excludes_greedy_arm():
+    """ε-exploration must draw from the non-greedy arms (corrected-latency
+    argmin excluded) — not from candidate order, which excludes an
+    arbitrary arm."""
+    bandit = ResidualBandit(BanditConfig(epsilon=1.0, seed=3))
+    fast = _profile(8.0, 1e11, bits=2)
+    mid = _profile(4.0, 1e10, bits=4)
+    slow = _profile(2.0, 1e9, bits=8)
+    ctx = _ctx(bandwidth=1e9)
+    # Put the greedy (lowest corrected latency) arm in every candidate
+    # position: with epsilon=1 it must never be selected.
+    by_latency = sorted([fast, mid, slow],
+                        key=lambda p: predicted_latency(p, ctx))
+    greedy = by_latency[0]
+    for order in ([fast, mid, slow], [mid, slow, fast], [slow, fast, mid]):
+        for _ in range(25):
+            assert bandit.select(0, list(order), ctx) is not greedy
+
+
+def test_exploration_with_single_arm_stays_greedy():
+    bandit = ResidualBandit(BanditConfig(epsilon=1.0, seed=0))
+    only = _profile(4.0, 1e10)
+    ctx = _ctx()
+    assert bandit.select(0, [only], ctx) is only

@@ -101,3 +101,176 @@ def test_store_eviction_under_tiny_capacity(reference_model):
         rt.run()
     assert store.used_bytes <= store.capacity_bytes
     assert store.stats.evictions > 0 or store.stats.rejected_puts > 0
+
+
+# ---------------------------------------------------------------------------
+# Batched slot-arena decode (PR 2)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_token_exact_parity_with_pr1_fixture(reference_model):
+    """The batched arena decode must emit exactly the tokens the PR-1
+    per-slot loop emitted (fixture pinned before the refactor) across a
+    pool hit/miss mix with staggered admissions."""
+    import json
+    from _runtime_scenario import (FIXTURE, build_runtime, params_digest,
+                                   run_scenario)
+    fix = json.loads(FIXTURE.read_text())
+    rt = build_runtime(reference_model)
+    if params_digest(rt.params) != fix["params_digest"]:
+        pytest.skip("reference model differs from the fixture's "
+                    "(e.g. CI trains a smaller REPRO_REF_STEPS model)")
+    out = run_scenario(rt)
+    assert set(out) == set(fix["outputs"])
+    for rid, rec in fix["outputs"].items():
+        assert out[rid]["pool_hit"] == rec["pool_hit"], rid
+        assert out[rid]["tokens"] == rec["tokens"], rid
+
+
+@pytest.mark.slow
+def test_arena_decode_token_exact_vs_per_slot_loop(reference_model):
+    """Decode-path equivalence, independent of the trained model: the
+    masked batched arena step must reproduce the PR-1 per-slot batch-1
+    decode loop token-for-token, including a lossy pool-style injection
+    and staggered slot activation (mask churn)."""
+    import jax.numpy as jnp
+    from repro.core.pipeline import CompressionPipeline
+    from repro.core.quality import (_jitted_steps, _prompts_for,
+                                    copy_cache_slot, extract_kv, inject_kv)
+    from repro.core.strategy import StrategyConfig
+    from repro.models.transformer import init_cache
+
+    cfg, params = reference_model
+    seq, n_slots, steps = 48, 4, 6
+    max_len = seq + steps + 2
+    pre1, dec1, _ = _jitted_steps(cfg.name, seq, 1, max_len)
+    _, _, arena_dec = _jitted_steps(cfg.name, seq, n_slots, max_len)
+
+    slot_caches, firsts = [], []
+    for i, w in enumerate(("qalike", "codelike", "mathlike", "summlike")):
+        tokens, _ = _prompts_for(w, 1, seq, seed=i)
+        logits, caches = pre1(params, {"tokens": tokens})
+        first = int(np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))[0])
+        if i == 3:  # pool-hit-like slot: lossy compress->decompress->inject
+            pipe = CompressionPipeline(StrategyConfig(
+                quantizer="uniform", key_bits=8, value_bits=8,
+                granularity="per_channel"))
+            kv = extract_kv(cfg, caches, 0, upto=seq)
+            restored = pipe.decompress(pipe.compress(kv))
+            caches = inject_kv(cfg, init_cache(cfg, 1, max_len), 0, restored)
+        slot_caches.append(caches)
+        firsts.append(first)
+
+    # ---- reference: PR-1 style per-slot batch-1 decode loops ----
+    ref_tokens = []
+    for caches, first in zip(slot_caches, firsts):
+        toks, c = [first], caches
+        for t in range(steps):
+            logits, c = dec1(params, c, jnp.asarray([[toks[-1]]], jnp.int32),
+                             jnp.asarray(seq + t, jnp.int32))
+            toks.append(int(np.asarray(
+                jnp.argmax(logits[:, -1, :], axis=-1))[0]))
+        ref_tokens.append(toks)
+
+    # ---- batched arena, slot i activating at iteration i ----
+    arena = init_cache(cfg, n_slots, max_len)
+    for i, caches in enumerate(slot_caches):
+        arena = copy_cache_slot(cfg, arena, caches, i)
+    pos = np.full(n_slots, seq, np.int32)
+    last = np.asarray(firsts, np.int32)
+    got = [[f] for f in firsts]
+    it = 0
+    while any(len(g) < steps + 1 for g in got):
+        mask = np.array([i <= it and len(got[i]) < steps + 1
+                         for i in range(n_slots)])
+        nxt, arena = arena_dec(params, arena, jnp.asarray(last[:, None]),
+                               jnp.asarray(pos), jnp.asarray(mask))
+        nxt = np.asarray(nxt)
+        for i in range(n_slots):
+            if mask[i]:
+                got[i].append(int(nxt[i]))
+                last[i] = nxt[i]
+                pos[i] += 1
+        it += 1
+    assert got == ref_tokens
+
+
+class _SpyController:
+    """Static-profile controller that records every observe() call."""
+
+    def __init__(self, profile):
+        self._profile = profile
+        self.observed = []
+
+    def select(self, ctx):
+        from repro.controller import Decision
+        return Decision(self._profile, 0, 0, 0.0)
+
+    def observe(self, ctx, decision, latency):
+        self.observed.append(float(latency))
+
+
+@pytest.mark.slow
+def test_runtime_observes_critical_path_latency(reference_model):
+    """Regression (PR 2): the miss path used to feed the bandit
+    t_compress + t_comm of the *off-critical-path pool write*; it must
+    observe the request's realized critical path = breakdown sum = jct."""
+    spy = _SpyController(_profile())
+    rt = _runtime(reference_model, controller=spy, static_profile=None)
+    rt.submit("qalike", prompt_seed=7)
+    rt.run()
+    (r,) = rt.completed
+    assert not r.pool_hit
+    assert len(spy.observed) == 1
+    assert spy.observed[0] == pytest.approx(sum(r.breakdown.values()),
+                                            abs=1e-9)
+    assert spy.observed[0] == pytest.approx(r.jct, abs=1e-9)
+    assert r.t_pool_write > 0  # off-path cost exists but is not charged
+    # pool hit: no controller decision is made -> nothing observed
+    rt.submit("qalike", prompt_seed=7)
+    rt.run()
+    assert rt.completed[-1].pool_hit
+    assert len(spy.observed) == 1
+
+
+@pytest.mark.slow
+def test_disaggregated_engine_observes_on_path_comm(reference_model):
+    """One-shot PD path: compress/comm/decompress ARE on the critical
+    path, so the observed latency equals that breakdown sum."""
+    from repro.serving.engine import DisaggregatedEngine
+    spy = _SpyController(_profile())
+    eng = DisaggregatedEngine(controller=spy, seq=48, decode_tokens=4,
+                              batch=2)
+    b = eng.serve("qalike", BandwidthTrace.constant(1 * GBPS))
+    assert len(spy.observed) == 1
+    assert spy.observed[0] == pytest.approx(
+        b.t_prefill + b.t_compress + b.t_comm + b.t_decompress, abs=1e-9)
+
+
+@pytest.mark.slow
+def test_run_budget_is_relative_to_the_call(reference_model):
+    """Regression (PR 2): run(max_steps) compared against the cumulative
+    step counter, so a second run() on a long-lived runtime returned
+    immediately with work still queued."""
+    rt = _runtime(reference_model)
+    rt.submit("qalike", prompt_seed=0)
+    rt.run(max_steps=3)
+    assert rt.steps == 3 and not rt.scheduler.idle
+    rt.run(max_steps=3)   # pre-fix: no-op (steps 3 >= budget 3)
+    assert rt.steps == 6
+    rt.run()
+    assert rt.scheduler.idle and len(rt.completed) == 1
+
+
+@pytest.mark.slow
+def test_arena_slot_recycling(reference_model):
+    """More requests than slots: slot ids stay in range, get recycled,
+    and all return to the scheduler's free pool when idle."""
+    rt = _runtime(reference_model)   # max_slots = 6
+    for i, w in enumerate(("qalike", "codelike", "mathlike", "summlike",
+                           "qalike", "codelike", "mathlike", "summlike")):
+        rt.submit(w, prompt_seed=i)
+    done = rt.run()
+    assert len(done) == 8
+    assert all(0 <= r.slot < rt.n_slots for r in done)
+    assert len({r.slot for r in done}) <= rt.n_slots < len(done)
+    assert sorted(rt.scheduler._free_slots) == list(range(rt.n_slots))

@@ -94,6 +94,34 @@ def test_decode_attention_matches_ref(bits, b, hkv, gq, d, s, group, blk):
                                rtol=1e-4)
 
 
+@pytest.mark.parametrize("bits", [4, 8])
+def test_decode_attention_multi_slot_matches_ref(bits):
+    """Slot-arena decode: per-row ragged kv_lens vs the oracle, and vs
+    row-by-row single-slot kernel calls."""
+    rng = np.random.default_rng(31 + bits)
+    b, hkv, gq, d, s, group, blk = 4, 2, 4, 64, 512, 64, 128
+    q = jnp.asarray(rng.standard_normal((b, hkv, gq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    kc8, ks = K.quantize_ref(k, bits, group)
+    vc8, vs = K.quantize_ref(v, bits, group)
+    kc = K.pack_int4_ref(kc8) if bits == 4 else kc8
+    vc = K.pack_int4_ref(vc8) if bits == 4 else vc8
+    kv_lens = jnp.asarray([s, s // 2, 3, s - 17], jnp.int32)
+    out = decode_attention_op(q, kc, ks, vc, vs, bits=bits, group=group,
+                              kv_len=kv_lens, block_s=blk)
+    ref = K.decode_attention_ref(q, kc8, ks, vc8, vs, group, kv_len=kv_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+    # each row must equal a standalone single-slot call at its own length
+    for i, n in enumerate(np.asarray(kv_lens)):
+        one = decode_attention_op(q[i:i+1], kc[i:i+1], ks[i:i+1], vc[i:i+1],
+                                  vs[i:i+1], bits=bits, group=group,
+                                  kv_len=int(n), block_s=blk)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(one[0]),
+                                   atol=2e-5, rtol=1e-4)
+
+
 def test_decode_attention_quantized_close_to_exact():
     """int8 KV attention stays close to full-precision attention."""
     rng = np.random.default_rng(9)

@@ -46,7 +46,7 @@ def test_workload_dependence(reference_model):
 def test_kv_extract_inject_roundtrip(reference_model):
     from repro.core.quality import _jitted_steps, _prompts_for, extract_kv, inject_kv
     cfg, params = reference_model
-    pre, dec = _jitted_steps(cfg.name, 96, 2, 100)
+    pre, dec, _ = _jitted_steps(cfg.name, 96, 2, 100)
     tokens, _ = _prompts_for("codelike", 2, 96, 0)
     _, caches = pre(params, {"tokens": tokens})
     kv = extract_kv(cfg, caches, 0, upto=96)

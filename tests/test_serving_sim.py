@@ -140,3 +140,26 @@ def test_estimator_drift():
     for _ in range(10):
         est.observe(50.0, 1.0)
     assert abs(est.estimate - 50.0) < 1.0
+
+
+def test_jittered_trace_replay_equality():
+    """Per-transfer jitter is a pure function of (seed, start, nbytes):
+    identical transfers replay identically, and interleaved callers (e.g.
+    a trace shared between runtime and simulator) cannot perturb each
+    other's draws."""
+    tr = BandwidthTrace([0.0], [1 * GBPS], jitter=0.8, seed=7)
+    t_a = tr.transfer_time(1.5, 1e6)
+    t_b = tr.transfer_time(2.5, 1e6)
+    # interleave unrelated transfers, then replay
+    for i in range(5):
+        tr.transfer_time(float(i), 1e5 * (i + 1))
+    assert tr.transfer_time(1.5, 1e6) == t_a
+    assert tr.transfer_time(2.5, 1e6) == t_b
+    # a fresh trace object with the same seed replays the same stream
+    tr2 = BandwidthTrace([0.0], [1 * GBPS], jitter=0.8, seed=7)
+    assert tr2.transfer_time(1.5, 1e6) == t_a
+    # different seed, start, or size actually re-draws
+    tr3 = BandwidthTrace([0.0], [1 * GBPS], jitter=0.8, seed=8)
+    assert tr3.transfer_time(1.5, 1e6) != t_a
+    assert tr.transfer_time(1.5001, 1e6) != t_a
+    assert tr.transfer_time(1.5, 1e6 + 1) != t_a
