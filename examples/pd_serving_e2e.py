@@ -1,7 +1,12 @@
 """End-to-end driver: serve the (trained) tiny reference model through the
-REAL disaggregated pipeline with batched requests — prefill worker, actual
-compressed bytes on a simulated link, decode worker — with the full KVServe
-stack (offline profiles -> controller -> bandit feedback).
+REAL PD-disaggregated *continuous* runtime — a prefill stream and a decode
+stream joined by a serialized compressed-KV wire, with the full KVServe
+stack (offline profiles -> service-aware controller -> bandit feedback).
+
+Each cold request's critical path is prefill -> controller-selected
+compress -> wire transfer -> decompress -> decode arena; repeated prompts
+hit the decode-side prefix pool instead.  A mid-run bandwidth drop shows
+the controller switching profiles on the live goodput estimate.
 
     PYTHONPATH=src python examples/pd_serving_e2e.py
 """
@@ -11,8 +16,8 @@ from repro.controller import ServiceAwareController
 from repro.core.strategy import BASELINES, StrategyConfig
 from repro.data.synthetic import WORKLOADS
 from repro.launch.profile_offline import build_profiles
-from repro.serving.engine import DisaggregatedEngine
-from repro.serving.network import GBPS, BandwidthTrace
+from repro.serving import GBPS, BandwidthTrace, SchedulerConfig
+from repro.serving.engine import RuntimeConfig, ServingRuntime
 
 
 def main():
@@ -26,29 +31,44 @@ def main():
         quality_kwargs={"n_prompts": 4, "decode_tokens": 12}, verbose=True)
 
     controller = ServiceAwareController({w: profiles for w in WORKLOADS})
-    engine = DisaggregatedEngine(controller=controller, batch=4,
-                                 decode_tokens=16)
-
-    # bandwidth drops mid-run: watch the controller switch profiles
+    # bandwidth drops mid-run (virtual-clock seconds): watch the
+    # controller switch profiles once the goodput estimate catches up
     trace = BandwidthTrace.steps(
-        [(0.0, 0.2 * GBPS), (6.0, 0.002 * GBPS), (14.0, 0.2 * GBPS)],
+        [(0.0, 0.2 * GBPS), (0.15, 0.002 * GBPS), (1.4, 0.2 * GBPS)],
         jitter=0.1, seed=0)
+    rt = ServingRuntime(
+        controller=controller,
+        config=RuntimeConfig(seq=96, decode_tokens=16,
+                             prefill_tok_s=2000.0, decode_tok_s=500.0,
+                             mode="pd"),
+        trace=trace,
+        scheduler=SchedulerConfig(max_slots=6, max_prefills_per_step=2,
+                                  max_queue=64))
 
-    print("\n== serving batched requests across the bandwidth drop ==")
-    print(f"{'t':>5s} {'workload':10s} {'chosen profile':42s} {'jct':>7s} "
-          f"{'comm':>7s} {'agree':>6s}")
+    print("\n== continuous PD serving across the bandwidth drop ==")
     rng = np.random.default_rng(0)
-    now = 0.0
-    for i in range(12):
+    for i in range(20):
         w = list(WORKLOADS)[int(rng.integers(0, 4))]
-        res = engine.serve(w, trace, now=now, q_min=0.3,
-                           seed=i)
-        print(f"{now:5.1f} {w:10s} {res.profile:42s} {res.jct:7.3f} "
-              f"{res.t_comm:7.3f} {res.agreement:6.3f}")
-        now += max(res.jct, 1.5)
+        # a few repeated prompt seeds => decode-side prefix-pool hits
+        rt.submit(w, q_min=0.3, prompt_seed=int(rng.integers(0, 12)))
+        rt.step()
+    done = rt.run()
 
-    print("\ngenerated samples (decode-worker output):")
-    print(" ", repr(res.text[0][:60]))
+    print(f"{'arr':>5s} {'workload':10s} {'chosen profile':42s} {'hit':>3s} "
+          f"{'jct':>7s} {'comm':>7s} {'ttft':>7s}")
+    for r in sorted(done, key=lambda r: r.arrival):
+        print(f"{r.arrival:5.1f} {r.workload:10s} {r.profile:42s} "
+              f"{'y' if r.pool_hit else 'n':>3s} {r.jct:7.3f} "
+              f"{r.breakdown.get('comm', 0.0):7.3f} {r.ttft:7.3f}")
+
+    s = rt.summary()
+    print(f"\nsummary: completed={s['completed']:.0f} "
+          f"pool_hit_rate={s['pool_hit_rate']:.2f} "
+          f"mean_jct={s['mean_jct']:.3f}s "
+          f"wire={s['wire_bytes_moved']/1e6:.2f}MB over "
+          f"{s['wire_transfers']:.0f} transfers")
+    print("\ngenerated sample (decode-stream output):")
+    print(" ", repr(done[-1].text[:60]))
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ from repro.controller.envelope import LowerEnvelope, build_envelope
 from repro.controller.latency_model import (
     ServiceContext,
     bandwidth_threshold,
+    baseline_latency,
     is_beneficial,
     predicted_latency,
 )
@@ -63,18 +64,27 @@ class ServiceAwareController:
 
     # ------------------------------------------------------------------
     def _bucket_of(self, q_min: float) -> int:
+        """Strictest bucket whose floor covers ``q_min`` (bucket 0 when
+        ``q_min`` exceeds every floor — the strictest available; ``select``
+        then filters candidates by ``q_min`` itself, so a budget above the
+        top floor never silently admits profiles below it)."""
+        best = 0
         for bi, floor in enumerate(self.buckets):
-            if floor <= q_min or bi == len(self.buckets) - 1:
-                # smallest bucket whose floor still satisfies q_min
-                return bi if floor >= q_min else max(bi - 1, 0)
-        return len(self.buckets) - 1
+            if floor >= q_min:
+                best = bi       # floors descend: keep the coarsest cover
+            else:
+                break
+        return best
 
     # ------------------------------------------------------------------
     def select(self, ctx: ServiceContext) -> Decision:
         bucket = self._bucket_of(ctx.q_min)
         env = self._envelopes.get((ctx.workload, bucket))
         if env is None or not env.lines:
-            return Decision(IDENTITY_PROFILE, 0, bucket, ctx.kv_bytes / ctx.bandwidth)
+            # Identity fallback: predicted must be comparable with the
+            # other branches' predicted_latency (t_model included), or the
+            # bandit's residuals for this arm absorb the whole model time.
+            return Decision(IDENTITY_PROFILE, 0, bucket, baseline_latency(ctx))
 
         x = 1.0 / max(ctx.bandwidth, 1e-9)
         if not self.use_envelope:
@@ -86,8 +96,12 @@ class ServiceAwareController:
         interval = env.optimal_index(x)
         candidates = env.candidates(x, n_neighbors=1)
         # Theorem 6.1: drop non-beneficial profiles at the current bandwidth.
+        # Eligibility is re-checked against the request's own q_min, not
+        # just the bucket floor: a q_min above the bucket floor (e.g. 1.0,
+        # above every floor) must not admit profiles below it.
         candidates = [p for p in candidates
-                      if p.cr <= 1.0 or is_beneficial(p, ctx.bandwidth)]
+                      if (p.cr <= 1.0 or is_beneficial(p, ctx.bandwidth))
+                      and (p.cr <= 1.0 or p.q(ctx.workload) >= ctx.q_min)]
         if not candidates:
             candidates = [IDENTITY_PROFILE]
 

@@ -26,6 +26,11 @@ class ServiceContext:
     q_min: float            # minimum relative quality
     t_model: float = 0.0    # strategy-independent execution time
     kv_bytes: float = 0.0   # V — uncompressed KV payload of the segment
+    # Which latency t_slo bounds ("ttft" | "jct").  The runtime feeds the
+    # matching observation through ServiceAwareController.observe, so the
+    # bandit's violation cooldown fires on the same metric the serving
+    # layer reports as slo_violated.
+    slo_metric: str = "jct"
 
 
 def predicted_latency(p: Profile, c: ServiceContext) -> float:

@@ -4,8 +4,14 @@ from repro.serving.kvstore import (
     StoreEntry,
     slo_rank,
 )
-from repro.serving.network import GBPS, BandwidthTrace, GoodputEstimator
-from repro.serving.request import Request, WorkloadMix, kv_bytes_for
+from repro.serving.network import (
+    GBPS,
+    BandwidthTrace,
+    GoodputEstimator,
+    KVWire,
+    WireTransfer,
+)
+from repro.serving.request import LIFECYCLE, Request, WorkloadMix, kv_bytes_for
 from repro.serving.scheduler import (
     AdmissionController,
     ContinuousScheduler,
@@ -27,7 +33,8 @@ from repro.serving.simulator import (
 # pulls in the jax model stack, which the simulator-only path doesn't need.
 
 __all__ = [
-    "GBPS", "BandwidthTrace", "GoodputEstimator", "Request", "WorkloadMix",
+    "GBPS", "BandwidthTrace", "GoodputEstimator", "KVWire", "WireTransfer",
+    "LIFECYCLE", "Request", "WorkloadMix",
     "kv_bytes_for", "KVServePolicy", "NoCompressionPolicy", "Policy",
     "SimConfig", "SimResult", "Simulator", "StaticPolicy",
     "PrefixKVStore", "StoreEntry", "SLO_CLASSES", "slo_rank",

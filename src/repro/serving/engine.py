@@ -2,23 +2,43 @@
 
 A faithful miniature of the paper's vLLM integration, in two granularities:
 
-* :class:`DisaggregatedEngine` — the original one-shot PD path: ``serve``
-  runs a single synchronous batch end-to-end (prefill -> compress -> wire
-  -> decompress -> decode) and reports a :class:`ServedBatch` breakdown.
+* :class:`DisaggregatedEngine` — the one-shot PD path: ``serve`` runs a
+  single synchronous batch end-to-end (prefill -> compress -> wire ->
+  decompress -> decode) and reports a :class:`ServedBatch` breakdown.  It
+  is a thin wrapper over the same stage helpers (:func:`compress_kvs`,
+  :func:`decompress_kvs`, :class:`~repro.serving.network.KVWire`) the
+  continuous runtime pipelines per request.
 
 * :class:`ServingRuntime` — the continuous-batching, multi-tenant runtime
   (DESIGN.md §9): ``submit`` enqueues :class:`~repro.serving.request.Request`
   objects through the shared :class:`~repro.serving.scheduler.ContinuousScheduler`
   (admission control + SLO-class priorities), and each ``step()`` is one
-  iteration — admit up to ``max_prefills_per_step`` prefill/fetch slots,
-  then advance every in-flight decode slot by one token with a SINGLE
-  jitted batched decode over the fixed-capacity slot arena.  Prompts whose
-  prefix is already in the :class:`~repro.serving.kvstore.PrefixKVStore`
-  are served from the pool (fetch real compressed bytes -> decompress ->
-  inject into the request's arena slot), reproducing the paper's
-  KV-disaggregated TTFT path; misses run a real prefill into the slot and
-  write the compressed prefix back to the pool with the profile the
-  Service-Aware Controller picked for the request.
+  iteration of TWO overlapped streams joined by a compressed-KV wire:
+
+  - the **prefill stream** admits up to ``max_prefills_per_step`` waiting
+    requests and runs each one's start-of-life stages;
+  - the **decode stream** advances every *previously running* slot one
+    token with a SINGLE jitted batched decode over the fixed-capacity
+    slot arena.
+
+  The streams run on separate workers, so an iteration costs
+  ``max(prefill stream, decode stream)`` and the difference is charged to
+  each request as ``stall`` — per-request breakdowns still sum exactly to
+  JCT.  Two serving scenarios share this loop (``RuntimeConfig.mode``):
+
+  - ``"pool"`` (KV-disaggregated prefix caching, the paper's TTFT path):
+    pool hits fetch real compressed bytes from the
+    :class:`~repro.serving.kvstore.PrefixKVStore`, misses prefill locally
+    and write the compressed prefix back *off* the critical path.
+  - ``"pd"`` (PD separation, the paper's JCT path): every cold request's
+    prefix KV crosses the network — prefill -> controller-selected
+    compress -> serialized :class:`~repro.serving.network.KVWire`
+    transfer -> decompress -> inject into the decode arena — all ON the
+    request's critical path, with concurrent transfers contending for
+    the wire.  The transferred bytes then seed the decode-side prefix
+    pool, so identical prompts hit without re-crossing the wire's cold
+    path.  Requests move through an explicit lifecycle
+    (waiting -> prefilling -> transferring -> decoding).
 
 The slot arena is ONE cache pytree with a leading slot axis of size
 ``max_slots``.  Each slot owns a cache row, a per-slot position, and a
@@ -29,8 +49,10 @@ batching amortization the per-slot loop of PR 1 lacked.
 
 Every byte on the "wire" is real pipeline output.  Compute time is either
 measured wall-clock or (for deterministic benchmarks) modelled from
-``prefill_tok_s`` / ``decode_tok_s``; communication time always comes from
-the :class:`~repro.serving.network.BandwidthTrace`.
+``prefill_tok_s`` / ``decode_tok_s`` (codec stages then follow the
+profile's measured throughputs, ``V/s_enc`` + ``V/s_dec``, per Eq. 1);
+communication time always comes from the
+:class:`~repro.serving.network.BandwidthTrace`.
 """
 from __future__ import annotations
 
@@ -57,7 +79,7 @@ from repro.core.quality import (
 from repro.core.strategy import StrategyConfig, is_identity
 from repro.data.tokenizer import ByteTokenizer
 from repro.serving.kvstore import PrefixKVStore
-from repro.serving.network import BandwidthTrace, GoodputEstimator
+from repro.serving.network import BandwidthTrace, GoodputEstimator, KVWire
 from repro.serving.request import Request, kv_bytes_for
 from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
 
@@ -74,6 +96,29 @@ def _select_profile(controller: Optional[ServiceAwareController],
         return static_profile, None
     from repro.core.profiles import IDENTITY_PROFILE
     return IDENTITY_PROFILE, None
+
+
+# ---------------------------------------------------------------------------
+# Shared PD stages (one-shot engine AND per-request continuous runtime)
+# ---------------------------------------------------------------------------
+def compress_kvs(strategy: StrategyConfig, kvs: Sequence[Any]
+                 ) -> Tuple[List[Any], int, float]:
+    """Compress each KV prefix for the wire.  Returns
+    ``(payloads, wire_bytes, measured_seconds)``."""
+    pipe = CompressionPipeline(strategy)
+    t0 = time.perf_counter()
+    comps = [pipe.compress(kv) for kv in kvs]
+    t_wall = time.perf_counter() - t0
+    return comps, sum(c.total_bytes() for c in comps), t_wall
+
+
+def decompress_kvs(comps: Sequence[CompressedKV]
+                   ) -> Tuple[List[Any], float]:
+    """Restore wire payloads to KV.  Returns ``(kvs, measured_seconds)``."""
+    t0 = time.perf_counter()
+    kvs = [CompressionPipeline(c.strategy).decompress(c) for c in comps]
+    t_wall = time.perf_counter() - t0
+    return kvs, t_wall
 
 
 @dataclass
@@ -98,8 +143,9 @@ class ServedBatch:
 
 
 class DisaggregatedEngine:
-    """PD-separated serving of the tiny reference model with real
-    compression on the KV path."""
+    """One-shot PD-separated serving of the tiny reference model: a thin
+    synchronous wrapper over the shared stage helpers (the continuous
+    :class:`ServingRuntime` pipelines the same stages per request)."""
 
     def __init__(self, controller: Optional[ServiceAwareController] = None,
                  static_profile: Optional[Profile] = None,
@@ -139,21 +185,15 @@ class DisaggregatedEngine:
         ctx = ServiceContext(workload=workload,
                              bandwidth=self.estimator.estimate,
                              t_slo=t_slo, q_min=q_min, t_model=t_prefill,
-                             kv_bytes=v_bytes)
+                             kv_bytes=v_bytes, slo_metric="jct")
         profile, decision = _select_profile(self.controller,
                                             self.static_profile, ctx)
 
-        # ---- compress -> wire -> decompress (real bytes) ----
-        pipe = CompressionPipeline(profile.strategy)
-        t0 = time.perf_counter()
-        comps = [pipe.compress(kv) for kv in kvs]
-        t_compress = time.perf_counter() - t0
-        wire_bytes = sum(c.total_bytes() for c in comps)
-        t_comm = trace.transfer_time(now + t_prefill + t_compress, wire_bytes)
-        self.estimator.observe(wire_bytes, t_comm)
-        t0 = time.perf_counter()
-        restored = [pipe.decompress(c) for c in comps]
-        t_decompress = time.perf_counter() - t0
+        # ---- compress -> wire -> decompress (shared PD stages) ----
+        comps, wire_bytes, t_compress = compress_kvs(profile.strategy, kvs)
+        wire = KVWire(trace, self.estimator)
+        t_comm = wire.send(now + t_prefill + t_compress, wire_bytes).t_comm
+        restored, t_decompress = decompress_kvs(comps)
 
         # ---- decode worker ----
         comp_caches = caches
@@ -188,14 +228,31 @@ class DisaggregatedEngine:
 class RuntimeConfig:
     seq: int = 96                 # prompt tokens (padded/truncated)
     decode_tokens: int = 12       # generation budget per request
+    # Serving scenario: "pool" = KV-disaggregated prefix caching (cold
+    # requests prefill locally, pool writes are off the critical path);
+    # "pd" = PD separation (every cold request's compressed KV crosses the
+    # serialized wire prefill -> compress -> transfer -> decompress ->
+    # decode, ON the critical path).
+    mode: str = "pool"
     # Virtual-clock cost model.  None = measure wall-clock (real execution
     # time of the tiny model); a float models a loaded cluster, which is the
-    # paper's pool regime where prefill is the expensive path.
+    # paper's pool regime where prefill is the expensive path.  When set,
+    # codec stages are modelled from the profile's measured throughputs
+    # (V/s_enc, V/s_dec — Eq. 1) so sweeps are deterministic.
     prefill_tok_s: Optional[float] = None
     decode_tok_s: Optional[float] = None
     pool_fetch_overhead: float = 0.002   # pool RPC setup cost (s)
     store_capacity: int = 64 << 20       # wire bytes
     store_block: int = 16
+    # PD cold path: what the decode arena is materialized from.  False
+    # (default) keeps the prefill worker's exact cache — cold decode is
+    # numerically identical to the pool scenario (token-exact vs the
+    # pinned PR-1 fixture); the compressed payload still crosses the wire
+    # byte-for-byte and is what later pool hits decode from, so the
+    # profile's quality loss surfaces exactly where the pool path's does.
+    # True injects the wire-restored KV instead (quality-faithful decode;
+    # tokens then reflect the selected profile's loss immediately).
+    pd_inject_restored: bool = False
 
 
 @dataclass
@@ -217,12 +274,20 @@ class ServedRequest:
     ttft: float
     slot: int = -1                # arena slot that served the request
     # Critical-path decomposition; sums exactly to jct.  Keys: queue,
-    # prefill | comm+decompress, decode, stall (time spent waiting on the
-    # iteration's other stream, e.g. head-of-line prefill blocking decode).
+    # prefill | comm+decompress (pool hit), decode, stall (time spent
+    # waiting on the iteration's other stream), and — PD mode — compress,
+    # wire_wait (queueing behind other transfers on the serialized wire),
+    # comm, decompress, all on the request's critical path.
     breakdown: Dict[str, float] = field(default_factory=dict)
     # Off-critical-path cost of writing the compressed prefix to the pool
     # (compress + wire), charged to the background writer, not the request.
+    # Always 0.0 in PD mode: there the transfer IS the critical path, and
+    # the transferred bytes seed the decode-side pool for free.
     t_pool_write: float = 0.0
+    # Which latency the SLO bounded ("ttft" | "jct") and whether it was
+    # violated — the bandit observed the SAME metric.
+    slo_metric: str = "jct"
+    slo_violated: bool = False
 
     @property
     def jct(self) -> float:
@@ -270,6 +335,11 @@ class ServingRuntime:
             self.cfg.store_capacity, block=self.cfg.store_block)
         self.trace = trace or BandwidthTrace.constant(1e9)
         self.estimator = GoodputEstimator(initial=self.trace.at(0.0))
+        # The PD transfer link: one serialized queue, so transfers of
+        # concurrently admitted requests contend (pool mode bills its
+        # fetches/writes straight from the trace instead — they model
+        # independent pool replicas, not one shared link).
+        self.wire = KVWire(self.trace, self.estimator)
         self.model_cfg, self.params = get_reference_model()
         self.max_len = self.cfg.seq + self.cfg.decode_tokens + 2
         self._pre1, _, _ = _jitted_steps(
@@ -305,13 +375,23 @@ class ServingRuntime:
         return self._arena
 
     # ------------------------------------------------------------------
+    @property
+    def slo_metric_default(self) -> str:
+        """Scenario default for requests that don't pin one: the pool
+        scenario's SLO is time-to-first-token, PD separation's is JCT."""
+        return "jct" if self.cfg.mode == "pd" else "ttft"
+
     def submit(self, workload: str, t_slo: float = 0.0, q_min: float = 0.97,
                slo_class: str = "standard", out_tokens: Optional[int] = None,
-               prompt_seed: int = 0) -> Optional[int]:
+               prompt_seed: int = 0,
+               slo_metric: Optional[str] = None) -> Optional[int]:
         """Admit one request at the current virtual time.  Two submissions
         with the same (workload, prompt_seed) share a prompt, so the second
         can be served from the prefix pool.  Returns the request id, or
         None if admission control shed it."""
+        if slo_metric not in (None, "ttft", "jct"):
+            raise ValueError(f"slo_metric must be 'ttft' or 'jct', "
+                             f"got {slo_metric!r}")
         rid = self._next_rid
         self._next_rid += 1
         tokens, _ = _prompts_for(workload, 1, self.cfg.seq, prompt_seed)
@@ -325,6 +405,7 @@ class ServingRuntime:
             kv_bytes=kv_bytes_for(self.cfg.seq, m.num_layers, m.kv_heads,
                                   m.resolved_head_dim),
             t_slo=t_slo, q_min=q_min, slo_class=slo_class,
+            slo_metric=slo_metric,
             prefix_key=tuple(int(t) for t in tokens))
         if not self.scheduler.submit(req, self.clock):
             return None
@@ -332,10 +413,62 @@ class ServingRuntime:
         return rid
 
     # ------------------------------------------------------------------
+    # Start-of-life stages, shared by the pool and PD paths
+    # ------------------------------------------------------------------
+    def _codec_cost(self, measured: float, nbytes: float,
+                    speed: float) -> float:
+        """Codec stage cost: measured wall-clock, or — under the virtual
+        clock — modelled from the profile's throughput (V/s, Eq. 1)."""
+        if self.cfg.prefill_tok_s is None:
+            return measured
+        return 0.0 if speed == float("inf") else nbytes / speed
+
+    def _run_prefill(self, req: Request, tokens: np.ndarray):
+        """Real batch-1 prefill on the prefill worker.  Returns
+        ``(caches, first_token, t_prefill)``."""
+        t0 = time.perf_counter()
+        logits, caches = self._pre1(self.params, {"tokens": tokens[None, :]})
+        jax.block_until_ready(logits)
+        t_wall = time.perf_counter() - t0
+        t_prefill = (req.ctx_tokens / self.cfg.prefill_tok_s
+                     if self.cfg.prefill_tok_s else t_wall)
+        first = int(np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))[0])
+        return caches, first, t_prefill
+
+    def _select_and_compress(self, req: Request, caches, t_prefill: float):
+        """Controller decision + real compression of the prefix KV.
+        Returns ``(comp, ctx, decision, profile, t_compress)``."""
+        kv = extract_kv(self.model_cfg, caches, 0, upto=self.cfg.seq)
+        ctx = ServiceContext(
+            workload=req.workload, bandwidth=self.estimator.estimate,
+            t_slo=req.t_slo, q_min=req.q_min, t_model=t_prefill,
+            kv_bytes=kv.nbytes_wire(),
+            slo_metric=req.resolved_slo_metric(self.slo_metric_default))
+        profile, decision = _select_profile(self.controller,
+                                            self.static_profile, ctx)
+        comps, _, t_wall = compress_kvs(profile.strategy, [kv])
+        t_compress = self._codec_cost(t_wall, kv.nbytes_wire(),
+                                      profile.s_enc)
+        return comps[0], ctx, decision, profile, t_compress
+
+    def _fetch_entry(self, entry, idx: int):
+        """Decompress a stored pool entry and inject it into arena slot
+        ``idx``.  Returns ``(first_token, t_decompress)``.  Cache injection
+        is host-side bookkeeping of the miniature (the cold path's
+        equivalent writes happen inside prefill), so it is not billed to
+        the virtual clock."""
+        comp, first, s_dec = entry.payload
+        restored, t_wall = decompress_kvs([comp])
+        t_decompress = self._codec_cost(t_wall, entry.kv_bytes, s_dec)
+        self._arena = inject_kv(self.model_cfg, self._ensure_arena(), idx,
+                                restored[0])
+        return int(first), t_decompress
+
+    # ------------------------------------------------------------------
     def _start_request(self, req: Request, now: float) -> float:
-        """Prefill-or-fetch one admitted request into its arena slot
-        (``req.slot``, assigned by the scheduler).  Returns the virtual
-        cost this slot added to the iteration."""
+        """Pool-mode start: prefill-or-fetch one admitted request into its
+        arena slot (``req.slot``, assigned by the scheduler).  Returns the
+        virtual cost this slot added to the iteration."""
         tokens = self._prompts[req.rid]
         key = req.prefix_key
         idx = req.slot
@@ -349,60 +482,41 @@ class ServingRuntime:
         if entry is not None:
             # ---- pool hit: fetch real compressed bytes, decompress, and
             # inject straight into the request's arena slot
-            comp, first = entry.payload
+            req.state = "transferring"
             t_comm = self.trace.transfer_time(now, entry.wire_bytes)
             self.estimator.observe(entry.wire_bytes, t_comm)
-            t0 = time.perf_counter()
-            pipe = CompressionPipeline(comp.strategy)
-            kv = pipe.decompress(comp)
-            t_decompress = time.perf_counter() - t0
-            # Cache injection is host-side bookkeeping of the miniature
-            # (the cold path's equivalent writes happen inside prefill),
-            # so it is not billed to the virtual clock.
-            self._arena = inject_kv(self.model_cfg, arena, idx, kv)
+            first, t_decompress = self._fetch_entry(entry, idx)
             cost = self.cfg.pool_fetch_overhead + t_comm + t_decompress
             bd.update(comm=self.cfg.pool_fetch_overhead + t_comm,
                       decompress=t_decompress)
-            slot = _Slot(req=req, idx=idx, toks=[int(first)],
+            req.state = "decoding"
+            slot = _Slot(req=req, idx=idx, toks=[first],
                          pool_hit=True,
-                         profile=comp.strategy.short_name(),
+                         profile=entry.payload[0].strategy.short_name(),
                          wire_bytes=int(entry.wire_bytes), breakdown=bd,
                          ttft=(now + cost) - req.arrival)
-            self._occupy(slot, int(first))
+            self._occupy(slot, first)
             return cost
 
         # ---- miss: real prefill into the slot, then write the compressed
         # prefix back to the pool
-        t0 = time.perf_counter()
-        logits, caches = self._pre1(self.params, {"tokens": tokens[None, :]})
-        jax.block_until_ready(logits)
-        t_wall = time.perf_counter() - t0
-        t_prefill = (req.ctx_tokens / self.cfg.prefill_tok_s
-                     if self.cfg.prefill_tok_s else t_wall)
-        first = int(np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))[0])
+        caches, first, t_prefill = self._run_prefill(req, tokens)
         bd.update(prefill=t_prefill)
         self._arena = copy_cache_slot(self.model_cfg, arena, caches, idx)
 
-        kv = extract_kv(self.model_cfg, caches, 0, upto=self.cfg.seq)
-        ctx = ServiceContext(workload=req.workload,
-                             bandwidth=self.estimator.estimate,
-                             t_slo=req.t_slo, q_min=req.q_min,
-                             t_model=t_prefill, kv_bytes=kv.nbytes_wire())
-        profile, decision = _select_profile(self.controller,
-                                            self.static_profile, ctx)
-        pipe = CompressionPipeline(profile.strategy)
-        t0 = time.perf_counter()
-        comp = pipe.compress(kv)
-        t_compress = time.perf_counter() - t0
+        comp, ctx, decision, profile, t_compress = \
+            self._select_and_compress(req, caches, t_prefill)
         wire = comp.total_bytes()
         # The pool write crosses the wire off the request's critical path;
         # its cost is booked to pool_write, and the controller observes the
         # request's critical-path latency at _finish instead.
         t_comm = self.trace.transfer_time(now + t_prefill + t_compress, wire)
         self.estimator.observe(wire, t_comm)
-        self.store.put(key, (comp, first), wire, kv_bytes=kv.nbytes_wire(),
+        self.store.put(key, (comp, first, profile.s_dec), wire,
+                       kv_bytes=ctx.kv_bytes,
                        workload=req.workload, slo_class=req.slo_class,
                        now=now + t_prefill + t_compress + t_comm)
+        req.state = "decoding"
         slot = _Slot(req=req, idx=idx, toks=[first], pool_hit=False,
                      profile=profile.strategy.short_name(),
                      wire_bytes=int(wire), breakdown=bd,
@@ -411,6 +525,88 @@ class ServingRuntime:
                      ctx=ctx, decision=decision)
         self._occupy(slot, first)
         return t_prefill
+
+    # ------------------------------------------------------------------
+    def _start_request_pd(self, req: Request, now: float,
+                          busy: float) -> Tuple[float, float]:
+        """PD-mode start: run one admitted request through its critical
+        path — prefill (on the prefill worker, serialized at ``busy``) ->
+        controller-selected compress -> serialized wire transfer ->
+        decompress -> inject into the decode arena.  A decode-side pool
+        hit skips the whole cold path (the prefix's bytes crossed the wire
+        earlier).  Returns ``(end_offset, new_busy)`` relative to ``now``.
+        """
+        tokens = self._prompts[req.rid]
+        key = req.prefix_key
+        idx = req.slot
+        bd: Dict[str, float] = {"queue": now - req.arrival}
+
+        entry = self.store.lookup(key, now=now, full=True)
+        if entry is not None:
+            # ---- decode-side prefix hit: the compressed prefix already
+            # crossed the wire for an earlier request; fetch it from the
+            # pool (contending for the same wire) instead of re-prefilling.
+            req.state = "transferring"
+            tr = self.wire.send(now + self.cfg.pool_fetch_overhead,
+                                entry.wire_bytes)
+            first, t_decompress = self._fetch_entry(entry, idx)
+            end = (self.cfg.pool_fetch_overhead + tr.t_wait + tr.t_comm
+                   + t_decompress)
+            bd.update(wire_wait=tr.t_wait,
+                      comm=self.cfg.pool_fetch_overhead + tr.t_comm,
+                      decompress=t_decompress)
+            req.state = "decoding"
+            slot = _Slot(req=req, idx=idx, toks=[first], pool_hit=True,
+                         profile=entry.payload[0].strategy.short_name(),
+                         wire_bytes=int(entry.wire_bytes), breakdown=bd,
+                         ttft=(now + end) - req.arrival)
+            self._occupy(slot, first)
+            return end, busy
+
+        # ---- cold request: the full PD critical path.  The prefill
+        # worker is serialized within the iteration (``busy``); the wire
+        # is serialized across ALL transfers (self.wire).
+        bd["queue"] += busy
+        caches, first, t_prefill = self._run_prefill(req, tokens)
+        comp, ctx, decision, profile, t_compress = \
+            self._select_and_compress(req, caches, t_prefill)
+        busy = busy + t_prefill + t_compress
+        wire_bytes = comp.total_bytes()
+        req.state = "transferring"
+        tr = self.wire.send(now + busy, wire_bytes)
+        # The arena row comes from the restored bytes or (default) from
+        # the prefill cache — see RuntimeConfig.pd_inject_restored.  The
+        # real decompress only runs when its output or its measured time
+        # is actually consumed (virtual-clock default models the cost from
+        # profile.s_dec, so running it would be pure benchmark tax).
+        if self.cfg.pd_inject_restored or self.cfg.prefill_tok_s is None:
+            restored, t_wall = decompress_kvs([comp])
+        else:
+            restored, t_wall = None, 0.0
+        t_decompress = self._codec_cost(t_wall, ctx.kv_bytes, profile.s_dec)
+        if self.cfg.pd_inject_restored:
+            self._arena = inject_kv(self.model_cfg, self._ensure_arena(),
+                                    idx, restored[0])
+        else:
+            self._arena = copy_cache_slot(self.model_cfg,
+                                          self._ensure_arena(), caches, idx)
+        # The bytes that just crossed the wire seed the decode-side pool
+        # (no extra transfer): later identical prompts hit it.
+        self.store.put(key, (comp, first, profile.s_dec), wire_bytes,
+                       kv_bytes=ctx.kv_bytes, workload=req.workload,
+                       slo_class=req.slo_class, now=tr.end)
+        end = busy + tr.t_wait + tr.t_comm + t_decompress
+        bd.update(prefill=t_prefill, compress=t_compress,
+                  wire_wait=tr.t_wait, comm=tr.t_comm,
+                  decompress=t_decompress)
+        req.state = "decoding"
+        slot = _Slot(req=req, idx=idx, toks=[first], pool_hit=False,
+                     profile=profile.strategy.short_name(),
+                     wire_bytes=int(wire_bytes), breakdown=bd,
+                     ttft=(now + end) - req.arrival,
+                     ctx=ctx, decision=decision)
+        self._occupy(slot, first)
+        return end, busy
 
     # ------------------------------------------------------------------
     def _occupy(self, slot: _Slot, first: int) -> None:
@@ -426,37 +622,61 @@ class ServingRuntime:
         req.done = now
         req.chosen = slot.profile
         req.breakdown = slot.breakdown
-        req.slo_violated = req.t_slo > 0 and slot.ttft > req.t_slo
+        # One SLO metric end to end: the same latency (ttft or jct,
+        # request-pinned or scenario default) is compared to t_slo here
+        # AND fed to the bandit, so its violation cooldown fires on the
+        # metric the runtime reports — not a different one.
+        metric = req.resolved_slo_metric(self.slo_metric_default)
+        observed = (slot.ttft if metric == "ttft"
+                    else sum(slot.breakdown.values()))
+        req.slo_violated = req.t_slo > 0 and observed > req.t_slo
         if self.controller is not None and slot.decision is not None:
-            # Residual-bandit feedback: the realized critical-path latency,
-            # exactly the ServedRequest breakdown sum (== jct).
-            self.controller.observe(slot.ctx, slot.decision,
-                                    sum(slot.breakdown.values()))
+            # Residual-bandit feedback: the realized critical-path latency
+            # of the SLO metric (jct == the ServedRequest breakdown sum).
+            self.controller.observe(slot.ctx, slot.decision, observed)
         self.completed.append(ServedRequest(
             rid=req.rid, workload=req.workload, slo_class=req.slo_class,
             text=self.tok.decode(toks), tokens=toks, profile=slot.profile,
             pool_hit=slot.pool_hit, kv_bytes=int(req.kv_bytes),
             wire_bytes=slot.wire_bytes, arrival=req.arrival, done=now,
             ttft=slot.ttft, slot=slot.idx, breakdown=slot.breakdown,
-            t_pool_write=slot.pool_write))
+            t_pool_write=slot.pool_write, slo_metric=metric,
+            slo_violated=req.slo_violated))
         self.scheduler.finish(req.rid)   # releases the arena slot id
         del self._slots[req.rid]
         self._prompts.pop(req.rid, None)
 
     # ------------------------------------------------------------------
+    def _prefill_stream(self, now: float) -> List[Tuple[_Slot, float]]:
+        """The iteration's prefill stream: admit up to
+        ``max_prefills_per_step`` waiting requests and run each through
+        its start-of-life stages.  Returns ``(slot, end_offset)`` pairs;
+        the stream's cost is the max end offset.  In pool mode the whole
+        start is serialized (prefill worker does everything); in PD mode
+        only the prefill worker serializes — a request's transfer overlaps
+        the next request's prefill, and transfers contend on the wire."""
+        started: List[Tuple[_Slot, float]] = []
+        busy = 0.0                # prefill-worker occupancy offset
+        for req in self.scheduler.next_prefills(now):
+            if self.cfg.mode == "pd":
+                end, busy = self._start_request_pd(req, now, busy)
+            else:
+                end = busy + self._start_request(req, now + busy)
+                busy = end
+            started.append((self._slots[req.rid], end))
+        return started
+
     def step(self) -> Dict[str, float]:
-        """One scheduler iteration: admit prefill/fetch slots, then advance
+        """One iteration of the two overlapped streams: the prefill stream
+        admits prefill/fetch/transfer work, the decode stream advances
         every *previously running* decode slot by one token (a request's
         first decode token comes the iteration after its prefill) — all
-        slots in ONE masked batched decode call."""
+        slots in ONE masked batched decode call.  The iteration costs
+        ``max(streams)``; the difference is charged as stall."""
         now = self.clock
-        started: List[Tuple[_Slot, float]] = []   # (slot, start-work end offset)
-        offset = 0.0
-        new_rids = set()
-        for req in self.scheduler.next_prefills(now):
-            offset += self._start_request(req, now + offset)
-            started.append((self._slots[req.rid], offset))
-            new_rids.add(req.rid)
+        started = self._prefill_stream(now)
+        prefill_cost = max((end for _, end in started), default=0.0)
+        new_rids = {s.req.rid for s, _ in started}
 
         # Iteration-level decode: every in-flight slot emits one token via
         # a single jitted arena step (per-slot positions, on-device argmax,
@@ -487,7 +707,7 @@ class ServingRuntime:
         # An iteration costs the slower of the prefill and decode streams
         # (PD-separated workers run them concurrently); the difference is
         # charged to each slot as "stall" so breakdowns sum exactly to jct.
-        iter_cost = max(offset, decode_cost)
+        iter_cost = max(prefill_cost, decode_cost)
         for slot in active:
             slot.breakdown["decode"] = \
                 slot.breakdown.get("decode", 0.0) + decode_cost
@@ -534,7 +754,12 @@ class ServingRuntime:
             "max_in_flight": self.max_in_flight(),
             "pool_hits": len(hits),
             "pool_hit_rate": len(hits) / max(len(self.completed), 1),
+            "wire_transfers": float(self.wire.transfers),
+            "wire_bytes_moved": float(self.wire.bytes_moved),
         }
+        if self.completed:
+            out["mean_jct"] = float(np.mean([r.jct for r in self.completed]))
+            out["mean_ttft"] = float(np.mean([r.ttft for r in self.completed]))
         if hits:
             out["mean_ttft_hit"] = float(np.mean([r.ttft for r in hits]))
         if cold:

@@ -56,12 +56,16 @@ class StoreEntry:
 class StoreStats:
     hits: int = 0
     misses: int = 0
+    # full=True lookups that found no full-coverage entry but DID have a
+    # usable block-aligned partial prefix — not a true miss (the prefix is
+    # warm; the consumer just can't top-up-prefill the uncovered suffix).
+    partial_misses: int = 0
     evictions: int = 0
     rejected_puts: int = 0    # payload alone exceeded capacity
 
     @property
     def hit_rate(self) -> float:
-        n = self.hits + self.misses
+        n = self.hits + self.misses + self.partial_misses
         return self.hits / n if n else 0.0
 
 
@@ -109,11 +113,24 @@ class PrefixKVStore:
                 e.hits += 1
                 self.stats.hits += 1
                 return e
-        self.stats.misses += 1
+        if full and any(
+                e is not None and e.created <= now
+                for e in (self._entries.get(k)
+                          for k in self._prefix_keys(tokens)[1:])):
+            # A usable partial prefix exists; the full=True consumer just
+            # cannot exploit it.  Distinct from a cold miss.
+            self.stats.partial_misses += 1
+        else:
+            self.stats.misses += 1
         return None
 
-    def contains(self, tokens: TokenKey) -> bool:
-        return tuple(tokens) in self._entries
+    def contains(self, tokens: TokenKey, now: float = 0.0) -> bool:
+        """Exact-key presence under the same write-visibility rule as
+        :meth:`lookup`: an entry whose pool write completes after ``now``
+        is not visible yet (no time-traveling entries).  Does not touch
+        recency or hit/miss counters."""
+        e = self._entries.get(tuple(tokens))
+        return e is not None and e.created <= now
 
     # ------------------------------------------------------------------
     def _evict_order(self) -> List[StoreEntry]:
@@ -177,6 +194,7 @@ class PrefixKVStore:
             "hit_rate": self.stats.hit_rate,
             "hits": self.stats.hits,
             "misses": self.stats.misses,
+            "partial_misses": self.stats.partial_misses,
             "evictions": self.stats.evictions,
             "rejected_puts": self.stats.rejected_puts,
         }

@@ -79,6 +79,59 @@ class BandwidthTrace:
 
 
 @dataclass
+class WireTransfer:
+    """Outcome of one serialized wire send."""
+
+    t_wait: float    # queueing behind earlier transfers (wire busy)
+    t_comm: float    # on-wire time once started
+    start: float     # absolute start time (after queueing)
+
+    @property
+    def total(self) -> float:
+        return self.t_wait + self.t_comm
+
+    @property
+    def end(self) -> float:
+        return self.start + self.t_comm
+
+
+class KVWire:
+    """The PD transfer link as a serialized queue: one transfer occupies the
+    wire at a time, so concurrent senders contend (a request admitted while
+    another's KV is in flight waits for the wire before its bytes move).
+    The wire is granted in ``send`` order — a later sender whose bytes are
+    ready earlier still queues behind an already-granted reservation
+    (admission order is priority order, so earlier senders keep the link).
+    Every send is billed from the :class:`BandwidthTrace` and reported to
+    the goodput estimator as ON-WIRE goodput (``nbytes / t_comm``, the B
+    of the latency model's transfer term); queueing delay is deliberately
+    excluded — it reaches the controller through the residual bandit's
+    observed latency (``wire_wait`` is on the critical path), not by
+    deflating the bandwidth estimate, which would double-count it."""
+
+    def __init__(self, trace: BandwidthTrace,
+                 estimator: Optional["GoodputEstimator"] = None):
+        self.trace = trace
+        self.estimator = estimator
+        self.free_at = 0.0
+        self.transfers = 0
+        self.bytes_moved = 0
+
+    def send(self, ready: float, nbytes: float) -> WireTransfer:
+        """Push ``nbytes`` onto the wire no earlier than ``ready``; returns
+        the queueing wait and on-wire time (both on the sender's critical
+        path)."""
+        start = max(ready, self.free_at)
+        t_comm = self.trace.transfer_time(start, nbytes)
+        self.free_at = start + t_comm
+        self.transfers += 1
+        self.bytes_moved += int(nbytes)
+        if self.estimator is not None:
+            self.estimator.observe(nbytes, t_comm)
+        return WireTransfer(t_wait=start - ready, t_comm=t_comm, start=start)
+
+
+@dataclass
 class GoodputEstimator:
     """EWMA over observed transfer goodputs — the controller's view of B."""
 

@@ -8,6 +8,14 @@ import numpy as np
 
 from repro.data.synthetic import WORKLOADS
 
+# Explicit request lifecycle (PD-disaggregated continuous runtime): the
+# scheduler moves a request waiting -> prefilling; the engine advances it
+# prefilling -> transferring (its compressed KV is on the wire) ->
+# decoding -> done.  Pool hits skip prefilling (the pool fetch IS their
+# transfer).  "rejected" is terminal for load-shed requests.
+LIFECYCLE = ("waiting", "prefilling", "transferring", "decoding", "done",
+             "rejected")
+
 
 @dataclass
 class Request:
@@ -18,6 +26,11 @@ class Request:
     out_tokens: int          # decode length
     kv_bytes: float          # uncompressed KV payload V
     t_slo: float = 0.0       # 0 = no SLO
+    # Which latency the SLO (and the controller's guardrail feedback)
+    # targets: "ttft" | "jct".  None = the serving scenario's default
+    # (pool/prefix-caching -> ttft, PD separation -> jct), resolved by
+    # whichever backend executes the request.
+    slo_metric: Optional[str] = None
     q_min: float = 0.97
     prefix_hit: bool = False  # pool scenario: reusable KV exists remotely
     # Scheduler priority class: interactive | standard | batch
@@ -31,6 +44,13 @@ class Request:
     # admission to a running slot, released on finish; None while waiting
     # and in the event-driven simulator, which has no physical slots).
     slot: Optional[int] = None
+    # Lifecycle state (see LIFECYCLE); maintained by the scheduler and the
+    # continuous runtime, observational for the event-driven simulator.
+    state: str = "waiting"
+
+    def resolved_slo_metric(self, scenario_default: str = "jct") -> str:
+        return self.slo_metric if self.slo_metric is not None \
+            else scenario_default
 
     # ---- outcome fields (filled by the simulator) ----
     done: float = 0.0

@@ -102,9 +102,11 @@ class ContinuousScheduler:
         """Admission-controlled enqueue.  False = rejected (load shed)."""
         if not self.admission.admit(req, len(self.waiting), now):
             req.chosen = "rejected"
+            req.state = "rejected"
             req.slo_violated = req.t_slo > 0
             req.done = req.arrival
             return False
+        req.state = "waiting"
         self.waiting.append(req)
         return True
 
@@ -136,6 +138,7 @@ class ContinuousScheduler:
             if req is None:
                 break
             req.slot = self._free_slots.pop()
+            req.state = "prefilling"
             self.running[req.rid] = req
             out.append(req)
         return out
@@ -145,4 +148,15 @@ class ContinuousScheduler:
         if req is not None:
             if req.slot is not None:
                 self._free_slots.append(req.slot)
+            req.state = "done"
             self.finished.append(req)
+
+    # ------------------------------------------------------------------
+    def state_counts(self) -> Dict[str, int]:
+        """Lifecycle census over non-terminal requests (waiting ->
+        prefilling -> transferring -> decoding; see
+        :data:`repro.serving.request.LIFECYCLE`)."""
+        counts: Dict[str, int] = {}
+        for req in list(self.waiting) + list(self.running.values()):
+            counts[req.state] = counts.get(req.state, 0) + 1
+        return counts

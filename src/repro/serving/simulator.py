@@ -287,11 +287,17 @@ class Simulator:
                 now = max(now, self.prefill.free_at[0][0])
 
     # ------------------------------------------------------------------
+    def _slo_metric(self, req: Request) -> str:
+        """Scenario default (pd -> jct, pool -> ttft) unless the request
+        pins one — the same resolution rule as the real runtime."""
+        return req.resolved_slo_metric(
+            "jct" if self.cfg.scenario == "pd" else "ttft")
+
     def _service_context(self, req: Request, t_model: float) -> ServiceContext:
         return ServiceContext(
             workload=req.workload, bandwidth=self.estimator.estimate,
             t_slo=req.t_slo, q_min=req.q_min, t_model=t_model,
-            kv_bytes=req.kv_bytes)
+            kv_bytes=req.kv_bytes, slo_metric=self._slo_metric(req))
 
     def _transfer(self, start: float, nbytes: float) -> float:
         dt = self.trace.transfer_time(start, nbytes)
@@ -332,10 +338,13 @@ class Simulator:
         req.breakdown["decode"] = t_decode_base
         req.breakdown["queue"] += q_wait2
         req.done = t
-        kv_latency = (req.breakdown["compress"] + req.breakdown["comm"]
-                      + req.breakdown["decompress"])
-        req.slo_violated = req.t_slo > 0 and req.jct > req.t_slo
-        self.policy.feedback(ctx, decision, kv_latency + ctx.t_model)
+        # Metric-matched feedback (same rule as the runtime's _finish):
+        # the bandit's violation cooldown fires on the latency reported as
+        # slo_violated, never a different quantity.
+        metric = self._slo_metric(req)
+        observed = req.ttft if metric == "ttft" else req.jct
+        req.slo_violated = req.t_slo > 0 and observed > req.t_slo
+        self.policy.feedback(ctx, decision, observed)
 
     # ------------------------------------------------------------------
     def _run_pool(self, req: Request, start: Optional[float] = None) -> None:

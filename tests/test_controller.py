@@ -63,6 +63,37 @@ def test_feedback_changes_selection(synthetic_profiles):
     assert dn.profile.strategy.key() != d0.profile.strategy.key()
 
 
+def test_identity_fallback_predicted_is_comparable(controller):
+    """Bugfix (PR 3): the no-envelope identity fallback built predicted as
+    kv_bytes/bandwidth, omitting t_model — biasing bandit residuals for
+    that arm by the whole model time.  It must equal baseline_latency."""
+    from repro.controller import baseline_latency
+    ctx = _ctx(bandwidth=1e8, w="unprofiled-workload")  # no envelope built
+    d = controller.select(ctx)
+    assert d.profile.cr == 1.0
+    assert d.predicted == pytest.approx(baseline_latency(ctx))
+    assert d.predicted == pytest.approx(ctx.t_model
+                                        + ctx.kv_bytes / ctx.bandwidth)
+
+
+def test_bucket_of_clamps_and_qmin_filters(controller):
+    """Bugfix (PR 3): q_min above every bucket floor (e.g. 1.0) used to
+    land in bucket 0 (floor 0.99) and silently admit profiles below the
+    requested quality.  The bucket clamps to the strictest, and candidate
+    eligibility re-checks q_min itself."""
+    assert controller._bucket_of(1.0) == 0       # clamped to strictest
+    assert controller._bucket_of(0.99) == 0
+    assert controller._bucket_of(0.97) == 1      # coarsest cover kept
+    assert controller._bucket_of(0.90) == 3
+    assert controller._bucket_of(0.0) == len(controller.buckets) - 1
+    # even at bandwidth where compression is attractive, q_min=1.0 must
+    # not admit a lossy profile below it
+    for bw in (1e6, 1e7, 1e8):
+        d = controller.select(_ctx(bandwidth=bw, q_min=1.0))
+        assert d.profile.cr == 1.0 or d.profile.q("qalike") >= 1.0, \
+            (bw, d.profile.cr, d.profile.q("qalike"))
+
+
 def test_workload_conditioning(synthetic_profiles):
     """Different per-workload quality -> potentially different selections."""
     profs = synthetic_profiles

@@ -213,10 +213,12 @@ class _SpyController:
 def test_runtime_observes_critical_path_latency(reference_model):
     """Regression (PR 2): the miss path used to feed the bandit
     t_compress + t_comm of the *off-critical-path pool write*; it must
-    observe the request's realized critical path = breakdown sum = jct."""
+    observe the request's realized critical path.  Since PR 3 the SLO
+    metric is explicit: with slo_metric="jct" the observation is the
+    breakdown sum (== jct), never the off-path pool write."""
     spy = _SpyController(_profile())
     rt = _runtime(reference_model, controller=spy, static_profile=None)
-    rt.submit("qalike", prompt_seed=7)
+    rt.submit("qalike", prompt_seed=7, slo_metric="jct")
     rt.run()
     (r,) = rt.completed
     assert not r.pool_hit
@@ -230,6 +232,35 @@ def test_runtime_observes_critical_path_latency(reference_model):
     rt.run()
     assert rt.completed[-1].pool_hit
     assert len(spy.observed) == 1
+
+
+@pytest.mark.slow
+def test_runtime_slo_metric_matches_observation(reference_model):
+    """Bugfix (PR 3): _finish used to flag slo_violated on TTFT while the
+    bandit guardrail compared the observed latency (JCT) to the same
+    t_slo.  Both now use the request's resolved slo_metric: pool-scenario
+    default is ttft (observation == ttft), and a request pinning jct is
+    both flagged and observed on jct."""
+    spy = _SpyController(_profile())
+    rt = _runtime(reference_model, controller=spy, static_profile=None)
+    rt.submit("qalike", prompt_seed=11)   # pool default -> ttft
+    rt.run()
+    (r,) = rt.completed
+    assert len(spy.observed) == 1
+    assert spy.observed[0] == pytest.approx(r.ttft, abs=1e-9)
+    assert spy.observed[0] < r.jct  # ttft is a strict prefix of jct here
+
+    # a tight TTFT SLO violated by the cold prefill: flag and observation
+    # agree (pre-fix, cooldown bookkeeping used jct while the runtime
+    # reported ttft violations)
+    spy2 = _SpyController(_profile())
+    rt2 = _runtime(reference_model, controller=spy2, static_profile=None)
+    rt2.submit("qalike", prompt_seed=12, t_slo=1e-6)
+    rt2.run()
+    (r2,) = rt2.completed
+    assert r2.slo_violated and spy2.observed[0] == pytest.approx(r2.ttft,
+                                                                 abs=1e-9)
+    assert spy2.observed[0] > 1e-6
 
 
 @pytest.mark.slow

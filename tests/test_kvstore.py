@@ -40,7 +40,8 @@ def test_slo_aware_lru_eviction_order():
     # needs 500 bytes -> evicts the two batch entries, LRU first
     evicted = store.put(_toks(4), "x", 500, slo_class="standard", now=4.0)
     assert [e.payload for e in evicted] == ["b_old", "b_new"]
-    assert store.contains(_toks(0)) and store.contains(_toks(3))
+    assert store.contains(_toks(0), now=4.0) and store.contains(_toks(3),
+                                                               now=4.0)
 
 
 def test_lru_recency_updated_by_lookup():
@@ -93,14 +94,46 @@ def test_compressed_kv_roundtrips_bit_exact_through_store():
 
 def test_full_lookup_requires_exact_coverage():
     """full=True consumers (the runtime) can't top-up a partial prefix, so
-    an entry covering only part of the prompt must not count as a hit."""
+    an entry covering only part of the prompt must not count as a hit —
+    but a usable block-aligned partial prefix is a *partial* miss, not a
+    cold one."""
     store = PrefixKVStore(capacity_bytes=10_000, block=16)
     base = tuple(range(32))
     store.put(base, "kv32", 100, now=0.0)
     assert store.lookup(base + tuple(range(100, 116)), now=1.0,
                         full=True) is None
     assert store.lookup(base, now=2.0, full=True).payload == "kv32"
-    assert store.stats.misses == 1 and store.stats.hits == 1
+    assert store.stats.partial_misses == 1 and store.stats.misses == 0
+    assert store.stats.hits == 1
+    # unrelated prompt: a true cold miss, not a partial one
+    assert store.lookup(tuple(range(500, 532)), now=3.0, full=True) is None
+    assert store.stats.misses == 1 and store.stats.partial_misses == 1
+    assert store.stats.hit_rate == pytest.approx(1 / 3)
+
+
+def test_partial_miss_requires_visible_partial_entry():
+    """A partial prefix still in flight (created > now) must not turn a
+    cold miss into a partial one."""
+    store = PrefixKVStore(capacity_bytes=10_000, block=16)
+    base = tuple(range(32))
+    store.put(base, "kv32", 100, now=5.0)   # write completes at t=5
+    assert store.lookup(base + tuple(range(100, 116)), now=1.0,
+                        full=True) is None
+    assert store.stats.misses == 1 and store.stats.partial_misses == 0
+
+
+def test_contains_respects_write_visibility():
+    """Regression: contains() used to ignore the created <= now rule that
+    lookup enforces, so callers could see time-traveling entries."""
+    store = PrefixKVStore(capacity_bytes=10_000, block=16)
+    store.put(_toks(0), "a", 100, now=2.5)  # pool write completes at t=2.5
+    assert not store.contains(_toks(0))            # default now=0.0
+    assert not store.contains(_toks(0), now=2.0)   # still in flight
+    assert store.contains(_toks(0), now=2.5)
+    assert store.contains(_toks(0), now=9.0)
+    assert not store.contains(_toks(1), now=9.0)
+    # presence probes leave recency and hit/miss counters untouched
+    assert store.stats.hits == 0 and store.stats.misses == 0
 
 
 def test_slo_rank_mapping():

@@ -1,0 +1,279 @@
+"""PD-disaggregated continuous runtime: two overlapped streams joined by
+a serialized compressed-KV wire (DESIGN.md §9, ISSUE 3)."""
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.profiles import IDENTITY_PROFILE, Profile
+from repro.core.strategy import StrategyConfig
+from repro.serving import BandwidthTrace, GBPS, SchedulerConfig
+
+
+def _profile(cr=2.0, bits=8, codec=None):
+    kw = {"codec": codec} if codec else {}
+    return Profile(StrategyConfig(quantizer="uniform", key_bits=bits,
+                                  value_bits=bits, granularity="per_channel",
+                                  **kw),
+                   cr=cr, s_enc=5e8, s_dec=5e8)
+
+
+def _pd_runtime(reference_model, *, seq=64, decode_tokens=6,
+                bandwidth=1 * GBPS, max_prefills=2, max_slots=6, **kw):
+    from repro.serving.engine import RuntimeConfig, ServingRuntime
+    defaults = dict(
+        static_profile=_profile(),
+        config=RuntimeConfig(seq=seq, decode_tokens=decode_tokens,
+                             prefill_tok_s=2000.0, decode_tok_s=500.0,
+                             mode="pd"),
+        trace=BandwidthTrace.constant(bandwidth),
+        scheduler=SchedulerConfig(max_slots=max_slots,
+                                  max_prefills_per_step=max_prefills,
+                                  max_queue=32))
+    defaults.update(kw)
+    rt = ServingRuntime(**defaults)
+    rt.model_cfg, rt.params = reference_model
+    return rt
+
+
+# ---------------------------------------------------------------------------
+# Token parity vs the pinned PR-1 fixture
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_pd_runtime_token_parity_with_pr1_fixture(reference_model):
+    """The PD runtime must reproduce the pinned PR-1 tokens bit-for-bit
+    across the pool hit/miss mix — the cold path's arena materialization
+    is numerically identical to the pool path's, even though every cold
+    request's compressed KV now crosses the wire on its critical path."""
+    from _runtime_scenario import FIXTURE, params_digest, run_scenario
+    fix = json.loads(FIXTURE.read_text())
+    rt = _pd_runtime(reference_model)
+    if params_digest(rt.params) != fix["params_digest"]:
+        pytest.skip("reference model differs from the fixture's "
+                    "(e.g. CI trains a smaller REPRO_REF_STEPS model)")
+    out = run_scenario(rt)
+    assert set(out) == set(fix["outputs"])
+    for rid, rec in fix["outputs"].items():
+        assert out[rid]["pool_hit"] == rec["pool_hit"], rid
+        assert out[rid]["tokens"] == rec["tokens"], rid
+    # and the PD invariant: every request moved real bytes over the wire
+    assert rt.wire.transfers == len(out)
+    assert rt.wire.bytes_moved > 0
+
+
+# ---------------------------------------------------------------------------
+# The PD critical path
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_pd_cold_request_critical_path_stages(reference_model):
+    """A cold PD request pays prefill -> compress -> comm -> decompress ON
+    its critical path (pool mode books only prefill there)."""
+    rt = _pd_runtime(reference_model)
+    rt.submit("qalike", prompt_seed=3)
+    rt.run()
+    (r,) = rt.completed
+    assert not r.pool_hit
+    for key in ("prefill", "compress", "comm", "decompress"):
+        assert r.breakdown.get(key, 0.0) > 0.0, (key, r.breakdown)
+    assert r.t_pool_write == 0.0   # no off-path write in PD mode
+    # TTFT = first token at the decode worker, after the wire
+    stages = (r.breakdown["queue"] + r.breakdown["prefill"]
+              + r.breakdown["compress"] + r.breakdown.get("wire_wait", 0.0)
+              + r.breakdown["comm"] + r.breakdown["decompress"])
+    assert r.ttft == pytest.approx(stages, abs=1e-9)
+    assert sum(r.breakdown.values()) == pytest.approx(r.jct, abs=1e-9)
+    # compressed on the wire: fewer bytes than the logical KV payload
+    assert 0 < r.wire_bytes < r.kv_bytes
+
+
+@pytest.mark.slow
+def test_pd_prefix_hit_skips_prefill_and_reuses_wire_bytes(reference_model):
+    """An identical prompt later hits the decode-side pool: no prefill,
+    and it fetches exactly the bytes the cold request pushed."""
+    rt = _pd_runtime(reference_model)
+    rt.submit("qalike", prompt_seed=9)
+    rt.run()
+    rt.submit("qalike", prompt_seed=9)
+    rt.run()
+    cold, hit = rt.completed
+    assert not cold.pool_hit and hit.pool_hit
+    assert hit.breakdown.get("prefill", 0.0) == 0.0
+    assert hit.wire_bytes == cold.wire_bytes
+    assert hit.ttft < cold.ttft
+    assert len(hit.tokens) == len(cold.tokens) == rt.cfg.decode_tokens + 1
+
+
+@pytest.mark.slow
+def test_pd_wire_serializes_concurrent_transfers(reference_model):
+    """Two cold requests admitted the same iteration contend for the wire:
+    the second transfer queues behind the first (wire_wait > 0), and the
+    transfers never overlap."""
+    # wire slow enough that a transfer outlasts the next prefill+compress
+    rt = _pd_runtime(reference_model, bandwidth=0.002 * GBPS)
+    rt.submit("qalike", prompt_seed=0)
+    rt.submit("codelike", prompt_seed=1)
+    rt.step()             # both admitted this iteration (max_prefills=2)
+    rt.run()
+    by_rid = {r.rid: r for r in rt.completed}
+    first, second = by_rid[0], by_rid[1]
+    # the first sender never waits; the second queues behind it on the
+    # wire for longer than its own head start (prefill is cheap here)
+    assert first.breakdown.get("wire_wait", 0.0) == 0.0
+    assert second.breakdown.get("wire_wait", 0.0) > 0.0
+    for r in rt.completed:
+        assert sum(r.breakdown.values()) == pytest.approx(r.jct, abs=1e-9)
+
+
+@pytest.mark.slow
+def test_pd_streams_overlap(reference_model):
+    """Request N+1's prefill/transfer proceeds while N decodes: with both
+    streams busy, the iteration costs max(streams), not their sum."""
+    rt = _pd_runtime(reference_model, max_prefills=1)
+    rt.submit("qalike", prompt_seed=0)
+    rt.step()             # rid 0: prefill + transfer
+    rt.submit("codelike", prompt_seed=1)
+    log_before = len(rt.step_log)
+    stats = rt.step()     # rid 1 starts WHILE rid 0 decodes
+    assert len(rt.step_log) == log_before + 1
+    assert stats["in_flight"] == 2.0
+    step_cost = rt.step_log[-1]["clock"] - rt.step_log[-2]["clock"]
+    r1_start = next(s for s in (rt._slots[1],)).breakdown
+    start_work = (r1_start["prefill"] + r1_start["compress"]
+                  + r1_start.get("wire_wait", 0.0) + r1_start["comm"]
+                  + r1_start["decompress"])
+    decode_cost = 1.0 / rt.cfg.decode_tok_s
+    assert step_cost == pytest.approx(max(start_work, decode_cost), rel=1e-9)
+    rt.run()
+
+
+@pytest.mark.slow
+def test_pd_lifecycle_states(reference_model):
+    """Explicit request lifecycle: waiting -> prefilling -> transferring ->
+    decoding -> done (rejected is terminal for shed load)."""
+    rt = _pd_runtime(reference_model, max_prefills=1, max_slots=2,
+                     scheduler=SchedulerConfig(max_slots=2,
+                                               max_prefills_per_step=1,
+                                               max_queue=3))
+    rt.submit("qalike", prompt_seed=0)
+    rt.submit("codelike", prompt_seed=1)
+    rt.submit("mathlike", prompt_seed=2)
+    assert rt.submit("summlike", prompt_seed=3) is None  # queue bound = 3
+    shed = rt.scheduler.admission.rejected
+    assert shed == 1
+    counts = rt.scheduler.state_counts()
+    assert counts == {"waiting": 3}
+    rt.step()
+    counts = rt.scheduler.state_counts()
+    assert counts.get("decoding") == 1 and counts.get("waiting") == 2
+    rt.run()
+    assert all(req.state == "done" for req in rt.scheduler.finished)
+
+
+@pytest.mark.slow
+def test_pd_slo_metric_defaults_to_jct(reference_model):
+    """PD scenario default SLO metric is JCT: the violation flag and the
+    controller observation both use it."""
+    class Spy:
+        def __init__(self, profile):
+            self.profile, self.observed = profile, []
+
+        def select(self, ctx):
+            from repro.controller import Decision
+            return Decision(self.profile, 0, 0, 0.0)
+
+        def observe(self, ctx, decision, latency):
+            self.observed.append((ctx.slo_metric, float(latency)))
+
+    spy = Spy(_profile())
+    rt = _pd_runtime(reference_model, controller=spy, static_profile=None)
+    rt.submit("qalike", prompt_seed=5, t_slo=1e-6)   # unmeetable SLO
+    rt.run()
+    (r,) = rt.completed
+    assert r.slo_metric == "jct" and r.slo_violated
+    assert len(spy.observed) == 1
+    metric, obs = spy.observed[0]
+    assert metric == "jct"
+    assert obs == pytest.approx(r.jct, abs=1e-9)
+    assert obs == pytest.approx(sum(r.breakdown.values()), abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Compression pays at low bandwidth, identity wins at high bandwidth
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_pd_compression_crossover(reference_model):
+    """The paper's headline mechanism in the continuous runtime: at 50 Mbps
+    a compressed profile beats identity on mean JCT; at 100 Gbps identity
+    wins (codec time no longer buys anything)."""
+    def mean_jct(profile, bandwidth):
+        rt = _pd_runtime(reference_model, static_profile=profile,
+                         bandwidth=bandwidth)
+        for i, w in enumerate(("qalike", "codelike", "mathlike", "summlike")):
+            rt.submit(w, prompt_seed=10 + i)
+            rt.step()
+        rt.run()
+        assert all(not r.pool_hit for r in rt.completed)
+        return float(np.mean([r.jct for r in rt.completed]))
+
+    comp = _profile(cr=6.0, bits=4, codec="zstd3")
+    low = 50e6 / 8     # 50 Mbps in bytes/s
+    high = 100 * GBPS
+    assert mean_jct(comp, low) < mean_jct(IDENTITY_PROFILE, low)
+    assert mean_jct(IDENTITY_PROFILE, high) < mean_jct(comp, high)
+
+
+# ---------------------------------------------------------------------------
+# Property: breakdowns sum exactly to JCT under mixed traffic
+# ---------------------------------------------------------------------------
+_MODEL = None
+
+
+def _cached_model():
+    global _MODEL
+    if _MODEL is None:
+        from repro.core.quality import get_reference_model
+        _MODEL = get_reference_model()
+    return _MODEL
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    mode=st.sampled_from(["pool", "pd"]),
+    max_prefills=st.sampled_from([2, 3]),
+)
+def test_breakdowns_sum_to_jct_property(seed, mode, max_prefills):
+    """Per-request breakdowns sum exactly to JCT with
+    max_prefills_per_step > 1 and mixed hit/miss/PD traffic — in BOTH
+    serving scenarios, and TTFT never exceeds JCT."""
+    from repro.serving.engine import RuntimeConfig, ServingRuntime
+
+    rng = np.random.default_rng(seed)
+    rt = ServingRuntime(
+        static_profile=_profile(),
+        config=RuntimeConfig(seq=48, decode_tokens=5, prefill_tok_s=2000.0,
+                             decode_tok_s=500.0, mode=mode),
+        trace=BandwidthTrace.constant(0.2 * GBPS),
+        scheduler=SchedulerConfig(max_slots=4,
+                                  max_prefills_per_step=max_prefills,
+                                  max_queue=32))
+    rt.model_cfg, rt.params = _cached_model()
+    workloads = ("qalike", "codelike", "mathlike", "summlike")
+    n = int(rng.integers(4, 9))
+    for _ in range(n):
+        rt.submit(workloads[int(rng.integers(4))],
+                  prompt_seed=int(rng.integers(3)),   # repeats => pool hits
+                  out_tokens=int(rng.integers(2, 6)),
+                  slo_class=("interactive", "standard",
+                             "batch")[int(rng.integers(3))])
+        for _ in range(int(rng.integers(3))):
+            rt.step()
+    done = rt.run()
+    assert len(done) == n
+    for r in done:
+        assert sum(r.breakdown.values()) == pytest.approx(r.jct, abs=1e-9), \
+            (mode, r.rid, r.breakdown, r.jct)
+        assert 0 < r.ttft <= r.jct + 1e-12
+        assert all(v >= -1e-12 for v in r.breakdown.values()), r.breakdown
