@@ -24,6 +24,7 @@ SUITES = [
     ("fig16r_online_adaptivity", "benchmarks.online_adaptivity"),
     ("fig12_hardware_tiers", "benchmarks.hardware_tiers"),
     ("serving_continuous_batching", "benchmarks.continuous_batching"),
+    ("serving_tiered_kv", "benchmarks.tiered_kv"),
     ("kernels", "benchmarks.kernel_throughput"),
     ("roofline", "benchmarks.roofline"),
 ]

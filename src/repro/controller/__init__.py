@@ -1,5 +1,9 @@
 from repro.controller.bandit import BanditConfig, ResidualBandit
-from repro.controller.controller import Decision, ServiceAwareController
+from repro.controller.controller import (
+    Decision,
+    FetchDecision,
+    ServiceAwareController,
+)
 from repro.controller.envelope import (
     LowerEnvelope,
     brute_force_optimal,
@@ -7,16 +11,20 @@ from repro.controller.envelope import (
 )
 from repro.controller.latency_model import (
     ServiceContext,
+    TierFetch,
     bandwidth_threshold,
     baseline_latency,
     is_beneficial,
     normalized_latency,
     predicted_latency,
+    tier_fetch_latency,
 )
 
 __all__ = [
-    "BanditConfig", "ResidualBandit", "Decision", "ServiceAwareController",
+    "BanditConfig", "ResidualBandit", "Decision", "FetchDecision",
+    "ServiceAwareController",
     "LowerEnvelope", "brute_force_optimal", "build_envelope",
-    "ServiceContext", "bandwidth_threshold", "baseline_latency",
+    "ServiceContext", "TierFetch", "bandwidth_threshold", "baseline_latency",
     "is_beneficial", "normalized_latency", "predicted_latency",
+    "tier_fetch_latency",
 ]

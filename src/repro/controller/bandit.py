@@ -90,9 +90,16 @@ class ResidualBandit:
 
     # ------------------------------------------------------------------
     def update(self, interval: int, p: Profile, ctx: ServiceContext,
-               observed_latency: float) -> None:
+               observed_latency: float,
+               predicted: Optional[float] = None) -> None:
+        """EWMA-track the residual of the prediction that was *acted on*:
+        pass ``predicted`` (the select-time ``Decision.predicted``) so a
+        bandwidth estimate that drifted between select and observe cannot
+        make the residual correct a prediction nobody acted on; without it
+        the prediction is recomputed from ``ctx`` (legacy behaviour)."""
         arm = self._arm(interval, p)
-        t_hat = predicted_latency(p, ctx)
+        t_hat = predicted if predicted is not None \
+            else predicted_latency(p, ctx)
         delta = observed_latency - t_hat
         a = self.config.alpha
         arm.residual = (1 - a) * arm.residual + a * delta

@@ -18,10 +18,12 @@ from repro.controller.bandit import BanditConfig, ResidualBandit
 from repro.controller.envelope import LowerEnvelope, build_envelope
 from repro.controller.latency_model import (
     ServiceContext,
+    TierFetch,
     bandwidth_threshold,
     baseline_latency,
     is_beneficial,
     predicted_latency,
+    tier_fetch_latency,
 )
 
 # Quality buckets by *relative accuracy loss* (Sec. 6.1: "bucket profiles by
@@ -38,6 +40,15 @@ class Decision:
     bucket: int
     predicted: float
     candidates: List[Profile] = field(default_factory=list)
+
+
+@dataclass
+class FetchDecision:
+    """Outcome of :meth:`ServiceAwareController.select_fetch`."""
+
+    option: TierFetch
+    predicted: float
+    candidates: List[TierFetch] = field(default_factory=list)
 
 
 class ServiceAwareController:
@@ -115,11 +126,32 @@ class ServiceAwareController:
                         candidates)
 
     # ------------------------------------------------------------------
+    def select_fetch(self, ctx: ServiceContext,
+                     options: Sequence[TierFetch]
+                     ) -> Optional[FetchDecision]:
+        """Tier-aware fetch routing (ISSUE 4): pick the materialization
+        route with the smallest tier-aware fetch term — e.g. trade
+        "fetch the stored encoding from DRAM" against "refetch a smaller
+        re-encoding" that pays encode time to cross a slow link with
+        fewer bytes.  (Min-latency choice also maximizes SLO feasibility:
+        if the argmin misses the deadline, every route does.)"""
+        opts = list(options)
+        if not opts:
+            return None
+        scored = [(tier_fetch_latency(o), o) for o in opts]
+        t, o = min(scored, key=lambda pair: pair[0])
+        return FetchDecision(o, t, opts)
+
+    # ------------------------------------------------------------------
     def observe(self, ctx: ServiceContext, decision: Decision,
                 observed_latency: float) -> None:
         if not self.use_bandit:
             return
         bandit = self._bandits.get((ctx.workload, decision.bucket))
         if bandit is not None:
+            # Residuals correct the prediction that was ACTED ON: the
+            # select-time Decision.predicted, not a recomputation from the
+            # observe-time context (whose bandwidth estimate may have
+            # drifted since the decision).
             bandit.update(decision.interval, decision.profile, ctx,
-                          observed_latency)
+                          observed_latency, predicted=decision.predicted)

@@ -61,3 +61,36 @@ def normalized_latency(p: Profile, inv_bandwidth: float) -> float:
     """T̃_p(x) = 1/s_p + x/cr_p (Eq. 6)."""
     s_term = 0.0 if p.s_eff == float("inf") else 1.0 / p.s_eff
     return s_term + inv_bandwidth / p.cr
+
+
+# ---------------------------------------------------------------------------
+# Tier-aware fetch term (ISSUE 4): the KV prefix lives in a memory
+# hierarchy, so the cost of materializing it depends on WHERE the bytes
+# sit and on which encoding crosses that tier's link.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TierFetch:
+    """One route for materializing a stored KV prefix.
+
+    ``variant="stored"`` fetches the tier's stored encoding as-is;
+    ``variant="reencoded"`` pays a source-side re-encode (``s_enc``) to
+    cross the link with fewer bytes — the "refetch smaller" route that
+    wins on slow links."""
+
+    tier: str                     # holding tier ("hbm" | "dram" | "remote")
+    wire_bytes: float             # bytes that cross the tier's fetch link
+    kv_bytes: float               # uncompressed payload V (decode restore)
+    bandwidth: float              # tier link effective bytes/s
+    overhead: float = 0.0         # per-fetch RPC/setup cost
+    s_dec: float = float("inf")   # decode-side decompress throughput
+    s_enc: float = float("inf")   # source-side re-encode throughput
+    variant: str = "stored"
+
+
+def tier_fetch_latency(opt: TierFetch) -> float:
+    """T_fetch = o + V/s_enc + wire/B_tier + V/s_dec — the tier-aware
+    analogue of Eq. 1's transfer term."""
+    enc = 0.0 if opt.s_enc == float("inf") else opt.kv_bytes / opt.s_enc
+    dec = 0.0 if opt.s_dec == float("inf") else opt.kv_bytes / opt.s_dec
+    return (opt.overhead + enc + opt.wire_bytes / max(opt.bandwidth, 1e-9)
+            + dec)

@@ -1,7 +1,12 @@
 from repro.serving.kvstore import (
     SLO_CLASSES,
+    KVTier,
     PrefixKVStore,
     StoreEntry,
+    TierHit,
+    TierSpec,
+    TieredKVStore,
+    default_tier_specs,
     slo_rank,
 )
 from repro.serving.network import (
@@ -38,6 +43,7 @@ __all__ = [
     "kv_bytes_for", "KVServePolicy", "NoCompressionPolicy", "Policy",
     "SimConfig", "SimResult", "Simulator", "StaticPolicy",
     "PrefixKVStore", "StoreEntry", "SLO_CLASSES", "slo_rank",
+    "KVTier", "TierHit", "TierSpec", "TieredKVStore", "default_tier_specs",
     "ContinuousScheduler", "SchedulerConfig", "AdmissionController",
     "priority_key",
 ]

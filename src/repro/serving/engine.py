@@ -27,9 +27,13 @@ A faithful miniature of the paper's vLLM integration, in two granularities:
   JCT.  Two serving scenarios share this loop (``RuntimeConfig.mode``):
 
   - ``"pool"`` (KV-disaggregated prefix caching, the paper's TTFT path):
-    pool hits fetch real compressed bytes from the
-    :class:`~repro.serving.kvstore.PrefixKVStore`, misses prefill locally
-    and write the compressed prefix back *off* the critical path.
+    the prefix pool is a :class:`~repro.serving.kvstore.TieredKVStore`
+    memory hierarchy (HBM -> DRAM -> remote by default); hits fetch real
+    compressed bytes over the holding tier's serialized link (concurrent
+    fetches/writes contend) and promote on access, misses prefill locally
+    and write the compressed prefix back through the hierarchy *off* the
+    critical path (capacity pressure demotes entries down the tiers,
+    re-compressing with the destination tier's profile).
   - ``"pd"`` (PD separation, the paper's JCT path): every cold request's
     prefix KV crosses the network — prefill -> controller-selected
     compress -> serialized :class:`~repro.serving.network.KVWire`
@@ -64,7 +68,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.controller import Decision, ServiceAwareController, ServiceContext
+from repro.controller import (
+    Decision,
+    ServiceAwareController,
+    ServiceContext,
+    TierFetch,
+)
 from repro.core.pipeline import CompressedKV, CompressionPipeline
 from repro.core.profiles import Profile
 from repro.core.quality import (
@@ -78,7 +87,13 @@ from repro.core.quality import (
 )
 from repro.core.strategy import StrategyConfig, is_identity
 from repro.data.tokenizer import ByteTokenizer
-from repro.serving.kvstore import PrefixKVStore
+from repro.serving.kvstore import (
+    PrefixKVStore,
+    TierHit,
+    TierSpec,
+    TieredKVStore,
+    default_tier_specs,
+)
 from repro.serving.network import BandwidthTrace, GoodputEstimator, KVWire
 from repro.serving.request import Request, kv_bytes_for
 from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
@@ -242,8 +257,17 @@ class RuntimeConfig:
     prefill_tok_s: Optional[float] = None
     decode_tok_s: Optional[float] = None
     pool_fetch_overhead: float = 0.002   # pool RPC setup cost (s)
-    store_capacity: int = 64 << 20       # wire bytes
+    store_capacity: int = 64 << 20       # wire bytes (remote/pool tier)
     store_block: int = 16
+    # KV memory hierarchy (ISSUE 4).  None builds the default: pool mode
+    # gets HBM -> DRAM -> remote (hot/dram capacities below, remote =
+    # store_capacity over the runtime's BandwidthTrace); PD mode gets a
+    # single remote tier sharing the PD transfer wire (the pool lives
+    # across the same link the compressed KV crosses).  Pass an explicit
+    # TierSpec list to override either.
+    tiers: Optional[Sequence[TierSpec]] = None
+    hot_tier_bytes: int = 4 << 20
+    dram_tier_bytes: int = 16 << 20
     # PD cold path: what the decode arena is materialized from.  False
     # (default) keeps the prefill worker's exact cache — cold decode is
     # numerically identical to the pool scenario (token-exact vs the
@@ -323,23 +347,56 @@ class ServingRuntime:
                  static_profile: Optional[Profile] = None,
                  config: Optional[RuntimeConfig] = None,
                  scheduler: Optional[SchedulerConfig] = None,
-                 store: Optional[PrefixKVStore] = None,
+                 store: Optional[Any] = None,
                  trace: Optional[BandwidthTrace] = None):
         self.cfg = config or RuntimeConfig()
         self.controller = controller
         self.static_profile = static_profile
         self.scheduler = ContinuousScheduler(scheduler or SchedulerConfig())
-        # NOTE: `store or ...` would discard a passed-in *empty* store
-        # (PrefixKVStore defines __len__).
-        self.store = store if store is not None else PrefixKVStore(
-            self.cfg.store_capacity, block=self.cfg.store_block)
         self.trace = trace or BandwidthTrace.constant(1e9)
         self.estimator = GoodputEstimator(initial=self.trace.at(0.0))
         # The PD transfer link: one serialized queue, so transfers of
-        # concurrently admitted requests contend (pool mode bills its
-        # fetches/writes straight from the trace instead — they model
-        # independent pool replicas, not one shared link).
+        # concurrently admitted requests contend.
         self.wire = KVWire(self.trace, self.estimator)
+        # The prefix pool is a tiered memory hierarchy; every fetch and
+        # write is routed through the holding tier's serialized link, so
+        # concurrent pool traffic contends (a flat PrefixKVStore passed in
+        # is adopted as a single remote tier over the runtime's trace).
+        if store is None:
+            specs = self.cfg.tiers
+            if specs is None:
+                if self.cfg.mode == "pd":
+                    specs = [TierSpec(
+                        "remote", self.cfg.store_capacity,
+                        bandwidth=self.trace,
+                        fetch_overhead=self.cfg.pool_fetch_overhead,
+                        observe_goodput=True)]
+                else:
+                    specs = default_tier_specs(
+                        self.cfg.store_capacity, self.trace,
+                        remote_overhead=self.cfg.pool_fetch_overhead,
+                        hot_bytes=self.cfg.hot_tier_bytes,
+                        dram_bytes=self.cfg.dram_tier_bytes)
+            self.store = TieredKVStore(specs, block=self.cfg.store_block,
+                                       estimator=self.estimator,
+                                       recompress=self._recompress_entry)
+            if self.cfg.mode == "pd":
+                # PD transfers and pool fetches/writes share ONE physical
+                # link — the pool sits across the same wire the compressed
+                # KV crosses.
+                self.store.tiers[-1].wire = self.wire
+        elif isinstance(store, TieredKVStore):
+            self.store = store
+            if store.estimator is None:
+                store.estimator = self.estimator
+            if store.recompress is None:
+                store.recompress = self._recompress_entry
+        else:
+            self.store = TieredKVStore.wrap_flat(
+                store, self.trace,
+                fetch_overhead=self.cfg.pool_fetch_overhead,
+                estimator=self.estimator)
+            self.store.recompress = self._recompress_entry
         self.model_cfg, self.params = get_reference_model()
         self.max_len = self.cfg.seq + self.cfg.decode_tokens + 2
         self._pre1, _, _ = _jitted_steps(
@@ -465,10 +522,73 @@ class ServingRuntime:
         return int(first), t_decompress
 
     # ------------------------------------------------------------------
-    def _start_request(self, req: Request, now: float) -> float:
+    def _recompress_entry(self, entry, profile: Profile
+                          ) -> Optional[Tuple[Any, int]]:
+        """Tier demotion / refetch-smaller hook: really re-encode a stored
+        ``(CompressedKV, first, s_dec)`` payload with ``profile``.  Returns
+        None when it would not shrink."""
+        comp, first, _ = entry.payload
+        if comp.strategy == profile.strategy:
+            return None
+        restored, _ = decompress_kvs([comp])
+        comps, wire, _ = compress_kvs(profile.strategy, restored)
+        if wire >= entry.wire_bytes:
+            return None
+        return (comps[0], first, profile.s_dec), wire
+
+    def _maybe_refetch_smaller(self, req: Request, hit: TierHit,
+                               now: float) -> float:
+        """Tier-aware fetch routing: ask the controller to trade fetching
+        the stored encoding over the holding tier's link against
+        re-encoding it with the pool tier's (most aggressive) demotion
+        profile before the transfer — the "refetch smaller" route that
+        pays encode time to cross a slow link with fewer bytes.  Returns
+        the source-side re-encode time spent ON the request's critical
+        path (0.0 when the stored route wins)."""
+        select_fetch = getattr(self.controller, "select_fetch", None)
+        if select_fetch is None:
+            return 0.0
+        tier, e = hit.tier, hit.entry
+        small = self.store.tiers[-1].spec.profile
+        if small is None or small.q(req.workload) < req.q_min:
+            return 0.0
+        bandwidth = (self.estimator.estimate if tier.spec.observe_goodput
+                     else tier.trace.at(now))
+        common = dict(tier=tier.name, kv_bytes=e.kv_bytes,
+                      bandwidth=bandwidth, overhead=tier.fetch_overhead)
+        stored = TierFetch(variant="stored", wire_bytes=e.wire_bytes,
+                           s_dec=e.payload[2], **common)
+        small_bytes = e.kv_bytes / max(small.cr, 1.0)
+        if small_bytes >= e.wire_bytes:
+            return 0.0
+        reenc = TierFetch(variant="reencoded", wire_bytes=small_bytes,
+                          s_enc=small.s_enc, s_dec=small.s_dec, **common)
+        ctx = ServiceContext(
+            workload=req.workload, bandwidth=bandwidth, t_slo=req.t_slo,
+            q_min=req.q_min, kv_bytes=e.kv_bytes,
+            slo_metric=req.resolved_slo_metric(self.slo_metric_default))
+        decision = select_fetch(ctx, [stored, reenc])
+        if decision is None or decision.option.variant != "reencoded":
+            return 0.0
+        t0 = time.perf_counter()
+        if not self.store.reencode(hit, small):
+            return 0.0
+        # The re-encode happens before the bytes can cross the link: its
+        # cost (the enc term of the fetch decision) is on the critical
+        # path — measured wall-clock, or V/s_enc under the virtual clock.
+        return self._codec_cost(time.perf_counter() - t0, e.kv_bytes,
+                                small.s_enc)
+
+    # ------------------------------------------------------------------
+    def _start_request(self, req: Request, now: float,
+                       busy: float) -> Tuple[float, float]:
         """Pool-mode start: prefill-or-fetch one admitted request into its
-        arena slot (``req.slot``, assigned by the scheduler).  Returns the
-        virtual cost this slot added to the iteration."""
+        arena slot (``req.slot``, assigned by the scheduler).  A hit never
+        touches the prefill worker — its fetch starts at ``now`` and
+        contends on the holding tier's serialized link; a miss serializes
+        on the prefill worker (``busy``) and writes the compressed prefix
+        back through the hot tier's link off the critical path.  Returns
+        ``(end_offset, new_busy)`` relative to ``now``."""
         tokens = self._prompts[req.rid]
         key = req.prefix_key
         idx = req.slot
@@ -476,19 +596,24 @@ class ServingRuntime:
         # full=True: a partial (block-aligned) prefix hit would leave the
         # uncovered prompt suffix without KV — the runtime has no top-up
         # prefill, so only a full-coverage entry counts as a pool hit.
-        entry = self.store.lookup(key, now=now, full=True)
+        hit = self.store.lookup(key, now=now, full=True)
         bd: Dict[str, float] = {"queue": now - req.arrival}
 
-        if entry is not None:
-            # ---- pool hit: fetch real compressed bytes, decompress, and
-            # inject straight into the request's arena slot
+        if hit is not None:
+            # ---- pool hit: fetch real compressed bytes over the holding
+            # tier's serialized link, decompress, inject into the slot
+            entry = hit.entry
             req.state = "transferring"
-            t_comm = self.trace.transfer_time(now, entry.wire_bytes)
-            self.estimator.observe(entry.wire_bytes, t_comm)
+            t_reencode = self._maybe_refetch_smaller(req, hit, now)
+            tr = self.store.fetch(hit, ready=now + t_reencode)
             first, t_decompress = self._fetch_entry(entry, idx)
-            cost = self.cfg.pool_fetch_overhead + t_comm + t_decompress
-            bd.update(comm=self.cfg.pool_fetch_overhead + t_comm,
+            cost = (t_reencode + hit.tier.fetch_overhead + tr.t_wait
+                    + tr.t_comm + t_decompress)
+            bd.update(wire_wait=tr.t_wait,
+                      comm=hit.tier.fetch_overhead + tr.t_comm,
                       decompress=t_decompress)
+            if t_reencode > 0:
+                bd["compress"] = t_reencode
             req.state = "decoding"
             slot = _Slot(req=req, idx=idx, toks=[first],
                          pool_hit=True,
@@ -496,10 +621,11 @@ class ServingRuntime:
                          wire_bytes=int(entry.wire_bytes), breakdown=bd,
                          ttft=(now + cost) - req.arrival)
             self._occupy(slot, first)
-            return cost
+            return cost, busy
 
-        # ---- miss: real prefill into the slot, then write the compressed
-        # prefix back to the pool
+        # ---- miss: real prefill into the slot (serialized on the prefill
+        # worker), then write the compressed prefix back to the hierarchy
+        bd["queue"] += busy
         caches, first, t_prefill = self._run_prefill(req, tokens)
         bd.update(prefill=t_prefill)
         self._arena = copy_cache_slot(self.model_cfg, arena, caches, idx)
@@ -507,24 +633,24 @@ class ServingRuntime:
         comp, ctx, decision, profile, t_compress = \
             self._select_and_compress(req, caches, t_prefill)
         wire = comp.total_bytes()
-        # The pool write crosses the wire off the request's critical path;
-        # its cost is booked to pool_write, and the controller observes the
+        # The pool write crosses the hot tier's link off the request's
+        # critical path (it still contends with fetches there); its cost
+        # is booked to pool_write, and the controller observes the
         # request's critical-path latency at _finish instead.
-        t_comm = self.trace.transfer_time(now + t_prefill + t_compress, wire)
-        self.estimator.observe(wire, t_comm)
-        self.store.put(key, (comp, first, profile.s_dec), wire,
-                       kv_bytes=ctx.kv_bytes,
-                       workload=req.workload, slo_class=req.slo_class,
-                       now=now + t_prefill + t_compress + t_comm)
+        wr = self.store.write(
+            key, (comp, first, profile.s_dec), wire, kv_bytes=ctx.kv_bytes,
+            workload=req.workload, slo_class=req.slo_class,
+            ready=now + busy + t_prefill + t_compress, tier=0)
         req.state = "decoding"
+        end = busy + t_prefill
         slot = _Slot(req=req, idx=idx, toks=[first], pool_hit=False,
                      profile=profile.strategy.short_name(),
                      wire_bytes=int(wire), breakdown=bd,
-                     ttft=(now + t_prefill) - req.arrival,
-                     pool_write=t_compress + t_comm,
+                     ttft=(now + end) - req.arrival,
+                     pool_write=t_compress + wr.t_wait + wr.t_comm,
                      ctx=ctx, decision=decision)
         self._occupy(slot, first)
-        return t_prefill
+        return end, end
 
     # ------------------------------------------------------------------
     def _start_request_pd(self, req: Request, now: float,
@@ -541,19 +667,20 @@ class ServingRuntime:
         idx = req.slot
         bd: Dict[str, float] = {"queue": now - req.arrival}
 
-        entry = self.store.lookup(key, now=now, full=True)
-        if entry is not None:
+        hit = self.store.lookup(key, now=now, full=True)
+        if hit is not None:
             # ---- decode-side prefix hit: the compressed prefix already
             # crossed the wire for an earlier request; fetch it from the
-            # pool (contending for the same wire) instead of re-prefilling.
+            # pool tier (contending for the same wire) instead of
+            # re-prefilling.
+            entry = hit.entry
             req.state = "transferring"
-            tr = self.wire.send(now + self.cfg.pool_fetch_overhead,
-                                entry.wire_bytes)
+            tr = self.store.fetch(hit, ready=now)
             first, t_decompress = self._fetch_entry(entry, idx)
-            end = (self.cfg.pool_fetch_overhead + tr.t_wait + tr.t_comm
+            end = (hit.tier.fetch_overhead + tr.t_wait + tr.t_comm
                    + t_decompress)
             bd.update(wire_wait=tr.t_wait,
-                      comm=self.cfg.pool_fetch_overhead + tr.t_comm,
+                      comm=hit.tier.fetch_overhead + tr.t_comm,
                       decompress=t_decompress)
             req.state = "decoding"
             slot = _Slot(req=req, idx=idx, toks=[first], pool_hit=True,
@@ -591,10 +718,11 @@ class ServingRuntime:
             self._arena = copy_cache_slot(self.model_cfg,
                                           self._ensure_arena(), caches, idx)
         # The bytes that just crossed the wire seed the decode-side pool
-        # (no extra transfer): later identical prompts hit it.
+        # tier (no extra transfer): later identical prompts hit it.
         self.store.put(key, (comp, first, profile.s_dec), wire_bytes,
                        kv_bytes=ctx.kv_bytes, workload=req.workload,
-                       slo_class=req.slo_class, now=tr.end)
+                       slo_class=req.slo_class, now=tr.end,
+                       tier=len(self.store.tiers) - 1)
         end = busy + tr.t_wait + tr.t_comm + t_decompress
         bd.update(prefill=t_prefill, compress=t_compress,
                   wire_wait=tr.t_wait, comm=tr.t_comm,
@@ -651,18 +779,18 @@ class ServingRuntime:
         """The iteration's prefill stream: admit up to
         ``max_prefills_per_step`` waiting requests and run each through
         its start-of-life stages.  Returns ``(slot, end_offset)`` pairs;
-        the stream's cost is the max end offset.  In pool mode the whole
-        start is serialized (prefill worker does everything); in PD mode
-        only the prefill worker serializes — a request's transfer overlaps
-        the next request's prefill, and transfers contend on the wire."""
+        the stream's cost is the max end offset.  In both modes only the
+        prefill worker serializes (``busy``): pool hits are pure fetches
+        that start at ``now`` and contend on their tier's serialized link,
+        misses/cold requests queue for the prefill worker, and in PD mode
+        a request's transfer overlaps the next request's prefill."""
         started: List[Tuple[_Slot, float]] = []
         busy = 0.0                # prefill-worker occupancy offset
         for req in self.scheduler.next_prefills(now):
             if self.cfg.mode == "pd":
                 end, busy = self._start_request_pd(req, now, busy)
             else:
-                end = busy + self._start_request(req, now + busy)
-                busy = end
+                end, busy = self._start_request(req, now, busy)
             started.append((self._slots[req.rid], end))
         return started
 

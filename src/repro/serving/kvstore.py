@@ -16,14 +16,26 @@ reproducing the paper's TTFT path (Sec. 7.2 / Fig. 14):
     (batch before standard before interactive), least-recently-used within
     a class, so latency-critical tenants keep their prefixes warm.
 
+Since ISSUE 4 the flat pool generalizes to a :class:`TieredKVStore` — an
+ordered memory hierarchy (device-adjacent HBM, host DRAM, remote pool).
+Each tier owns a capacity, a serialized fetch link
+(:class:`~repro.serving.network.KVWire` over its own
+:class:`~repro.serving.network.BandwidthTrace`), and an optional demotion
+re-compression profile.  Hits fetch from the tier that holds the prefix
+and **promote** on access; capacity pressure **demotes** victims down the
+hierarchy (re-compressing with the destination tier's profile) instead of
+dropping them — only the last tier truly evicts.
+
 Shared by the real-execution :class:`~repro.serving.engine.ServingRuntime`
 and the event-driven :class:`~repro.serving.simulator.Simulator` so both
-exercise one eviction code path (DESIGN.md §9).
+exercise one placement/eviction code path (DESIGN.md §9).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.network import BandwidthTrace, KVWire, WireTransfer
 
 TokenKey = Tuple[int, ...]
 
@@ -61,7 +73,9 @@ class StoreStats:
     # warm; the consumer just can't top-up-prefill the uncovered suffix).
     partial_misses: int = 0
     evictions: int = 0
-    rejected_puts: int = 0    # payload alone exceeded capacity
+    # payload alone exceeded capacity, OR making room would have evicted
+    # an entry of strictly more critical SLO rank (never allowed).
+    rejected_puts: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -73,7 +87,9 @@ class PrefixKVStore:
     """Bounded pool of compressed KV prefixes with SLO-aware LRU eviction."""
 
     def __init__(self, capacity_bytes: int, block: int = 16):
-        assert capacity_bytes > 0 and block > 0
+        # capacity 0 is legal (a disabled tier in a TieredKVStore: every
+        # put is oversize and falls through to the next tier).
+        assert capacity_bytes >= 0 and block > 0
         self.capacity_bytes = int(capacity_bytes)
         self.block = int(block)
         self._entries: Dict[TokenKey, StoreEntry] = {}
@@ -138,12 +154,21 @@ class PrefixKVStore:
         return sorted(self._entries.values(),
                       key=lambda e: (-e.rank, e.last_used))
 
-    def _make_room(self, need: int) -> List[StoreEntry]:
-        # put() has already rejected payloads larger than the whole pool.
+    def _make_room(self, need: int, rank: int) -> Optional[List[StoreEntry]]:
+        """Evict until ``need`` bytes fit, lowest-priority-first — but an
+        insert of SLO rank ``rank`` must NEVER evict an entry of strictly
+        more critical rank (lower number).  Returns the evicted entries,
+        or None when room cannot be made without such an inversion (the
+        caller rejects/demotes the insert; nothing is evicted then)."""
+        if self.used_bytes + need <= self.capacity_bytes:
+            return []
+        eligible = [e for e in self._evict_order() if e.rank >= rank]
+        freeable = sum(e.wire_bytes for e in eligible)
+        if self.used_bytes - freeable + need > self.capacity_bytes:
+            return None
         evicted: List[StoreEntry] = []
-        order = self._evict_order()
-        while self.used_bytes + need > self.capacity_bytes and order:
-            victim = order.pop(0)
+        while self.used_bytes + need > self.capacity_bytes:
+            victim = eligible.pop(0)
             del self._entries[victim.tokens]
             self.used_bytes -= victim.wire_bytes
             self.stats.evictions += 1
@@ -151,28 +176,56 @@ class PrefixKVStore:
         return evicted
 
     # ------------------------------------------------------------------
+    def discard(self, tokens: TokenKey) -> Optional[StoreEntry]:
+        """Silently remove and return the exact-key entry (None if absent).
+        No stats are touched — this is the tiered store's move primitive."""
+        e = self._entries.pop(tuple(tokens), None)
+        if e is not None:
+            self.used_bytes -= e.wire_bytes
+        return e
+
+    # ------------------------------------------------------------------
+    def try_put_entry(self, entry: StoreEntry
+                      ) -> Tuple[str, List[StoreEntry]]:
+        """Insert a pre-built entry.  Returns ``(status, evicted)`` with
+        status ``"stored"`` | ``"oversize"`` (payload exceeds the whole
+        pool) | ``"protected"`` (room would require evicting a strictly
+        more critical SLO rank).  On non-stored statuses nothing is
+        evicted and a pre-existing same-key entry is left in place."""
+        entry.tokens = tuple(entry.tokens)
+        entry.wire_bytes = int(entry.wire_bytes)
+        if entry.wire_bytes > self.capacity_bytes:
+            return "oversize", []
+        old = self._entries.pop(entry.tokens, None)
+        if old is not None:
+            self.used_bytes -= old.wire_bytes
+        evicted = self._make_room(entry.wire_bytes, entry.rank)
+        if evicted is None:
+            if old is not None:   # roll the refresh back untouched
+                self._entries[entry.tokens] = old
+                self.used_bytes += old.wire_bytes
+            return "protected", []
+        self._entries[entry.tokens] = entry
+        self.used_bytes += entry.wire_bytes
+        assert self.used_bytes <= self.capacity_bytes
+        return "stored", evicted
+
     def put(self, tokens: TokenKey, payload: Any, wire_bytes: int,
             kv_bytes: float = 0.0, workload: str = "",
             slo_class: str = "standard", now: float = 0.0
             ) -> List[StoreEntry]:
         """Insert (or refresh) the entry for ``tokens``, evicting until it
-        fits.  Returns the evicted entries.  A payload larger than the whole
-        pool is rejected (counted, nothing evicted for it)."""
-        tokens = tuple(tokens)
-        wire_bytes = int(wire_bytes)
-        if wire_bytes > self.capacity_bytes:
-            self.stats.rejected_puts += 1
-            return []
-        old = self._entries.pop(tokens, None)
-        if old is not None:
-            self.used_bytes -= old.wire_bytes
-        evicted = self._make_room(wire_bytes)
-        self._entries[tokens] = StoreEntry(
-            tokens=tokens, payload=payload, wire_bytes=wire_bytes,
+        fits.  Returns the evicted entries.  A payload larger than the
+        whole pool — or one that could only fit by evicting a strictly
+        more critical SLO class — is rejected (counted, nothing evicted)."""
+        entry = StoreEntry(
+            tokens=tuple(tokens), payload=payload, wire_bytes=int(wire_bytes),
             kv_bytes=kv_bytes, workload=workload, slo_class=slo_class,
             created=now, last_used=now)
-        self.used_bytes += wire_bytes
-        assert self.used_bytes <= self.capacity_bytes
+        status, evicted = self.try_put_entry(entry)
+        if status != "stored":
+            self.stats.rejected_puts += 1
+            return []
         return evicted
 
     # ------------------------------------------------------------------
@@ -198,3 +251,347 @@ class PrefixKVStore:
             "evictions": self.stats.evictions,
             "rejected_puts": self.stats.rejected_puts,
         }
+
+
+# ===========================================================================
+# Tiered memory hierarchy (ISSUE 4 tentpole)
+# ===========================================================================
+@dataclass
+class TierSpec:
+    """Declarative description of one tier of the KV memory hierarchy."""
+
+    name: str                     # "hbm" | "dram" | "remote" | ...
+    capacity_bytes: int           # wire-byte capacity (0 = disabled tier)
+    # Fetch link: a bytes/s constant or a full BandwidthTrace.  The link is
+    # ONE serialized queue (half-duplex): fetches, pool writes and demotion
+    # traffic into this tier all contend on it.
+    bandwidth: Any = 10 * (1 << 30)
+    fetch_overhead: float = 0.0   # per-fetch RPC/setup cost (s)
+    # Demotion policy: entries demoted INTO this tier are re-compressed
+    # with this profile (when the owner installed a `recompress` hook and
+    # it actually shrinks the payload).  None = keep the stored encoding.
+    profile: Optional[Any] = None
+    # Feed this tier's on-wire goodput to the shared estimator (the
+    # controller's B).  Only the remote/pool tier should: local-tier
+    # goodput would inflate the network estimate.
+    observe_goodput: bool = False
+
+
+class KVTier:
+    """A built tier: its bounded store + its serialized fetch link."""
+
+    def __init__(self, spec: TierSpec, block: int):
+        self.spec = spec
+        self.name = spec.name
+        self.trace = (spec.bandwidth
+                      if isinstance(spec.bandwidth, BandwidthTrace)
+                      else BandwidthTrace.constant(float(spec.bandwidth)))
+        self.wire = KVWire(self.trace)
+        self.store = PrefixKVStore(int(spec.capacity_bytes), block=block)
+
+    @property
+    def fetch_overhead(self) -> float:
+        return self.spec.fetch_overhead
+
+
+@dataclass
+class TierHit:
+    """A lookup hit, tagged with the tier that holds the bytes."""
+
+    entry: StoreEntry
+    tier_index: int
+    tier: KVTier
+
+
+@dataclass
+class TieredStats(StoreStats):
+    promotions: int = 0       # entries copied up on access
+    demotions: int = 0        # victims pushed down instead of dropped
+    slo_protected: int = 0    # tier-level inserts demoted by the SLO rule
+    tier_hits: Dict[str, int] = field(default_factory=dict)
+
+
+def default_tier_specs(remote_capacity: int, remote_bandwidth: Any,
+                       *, remote_overhead: float = 0.002,
+                       hot_bytes: int = 4 << 20,
+                       hot_bandwidth: float = 64e9,
+                       dram_bytes: int = 16 << 20,
+                       dram_bandwidth: float = 8e9,
+                       dram_overhead: float = 5e-4,
+                       dram_profile: Optional[Any] = None,
+                       remote_profile: Optional[Any] = None
+                       ) -> List[TierSpec]:
+    """The canonical HBM -> DRAM -> remote-pool hierarchy."""
+    return [
+        TierSpec("hbm", int(hot_bytes), bandwidth=hot_bandwidth),
+        TierSpec("dram", int(dram_bytes), bandwidth=dram_bandwidth,
+                 fetch_overhead=dram_overhead, profile=dram_profile),
+        TierSpec("remote", int(remote_capacity), bandwidth=remote_bandwidth,
+                 fetch_overhead=remote_overhead, profile=remote_profile,
+                 observe_goodput=True),
+    ]
+
+
+class TieredKVStore:
+    """Ordered hierarchy of :class:`PrefixKVStore` tiers with serialized
+    per-tier fetch links.
+
+    Placement: ``put`` lands at the hottest tier that fits (``tier=`` picks
+    the starting tier; the PD runtime writes straight to the pool tier);
+    capacity pressure *demotes* victims down the hierarchy — re-compressed
+    with the destination tier's profile via the owner-installed
+    ``recompress(entry, profile) -> (payload, wire_bytes) | None`` hook —
+    and only the last tier truly evicts.  A tier-level insert that would
+    evict a strictly more critical SLO rank demotes the incoming entry
+    instead (``stats.slo_protected``).  Hits promote to the hot tier on
+    access (piggybacking on the fetch — no extra link time); demotion
+    transfers ARE billed on the destination tier's link, and a demoted
+    entry stays invisible until its transfer lands (``created`` rule).
+    """
+
+    def __init__(self, specs: Sequence[TierSpec], block: int = 16,
+                 estimator: Optional[Any] = None,
+                 recompress: Optional[
+                     Callable[[StoreEntry, Any],
+                              Optional[Tuple[Any, int]]]] = None):
+        assert specs, "at least one tier required"
+        self.block = int(block)
+        self.tiers: List[KVTier] = [KVTier(s, self.block) for s in specs]
+        self.estimator = estimator
+        self.recompress = recompress
+        self.stats = TieredStats()
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def wrap_flat(cls, store: PrefixKVStore, bandwidth: Any,
+                  fetch_overhead: float = 0.0,
+                  estimator: Optional[Any] = None,
+                  name: str = "remote") -> "TieredKVStore":
+        """Adopt an existing flat pool as a single remote tier (the
+        caller's store object keeps owning entries and stats)."""
+        spec = TierSpec(name, store.capacity_bytes, bandwidth=bandwidth,
+                        fetch_overhead=fetch_overhead, observe_goodput=True)
+        self = cls([spec], block=store.block, estimator=estimator)
+        self.tiers[0].store = store
+        return self
+
+    # ------------------------------------------------------------------
+    def lookup(self, tokens: TokenKey, now: float = 0.0,
+               full: bool = False) -> Optional[TierHit]:
+        """Walk tiers hot -> cold; first tier holding a usable prefix wins
+        (the hierarchy is exclusive: a key lives in exactly one tier)."""
+        partial = False
+        for i, tier in enumerate(self.tiers):
+            before_pm = tier.store.stats.partial_misses
+            e = tier.store.lookup(tokens, now=now, full=full)
+            if e is not None:
+                self.stats.hits += 1
+                self.stats.tier_hits[tier.name] = \
+                    self.stats.tier_hits.get(tier.name, 0) + 1
+                return TierHit(entry=e, tier_index=i, tier=tier)
+            partial = partial or (tier.store.stats.partial_misses > before_pm)
+        if partial:
+            self.stats.partial_misses += 1
+        else:
+            self.stats.misses += 1
+        return None
+
+    def contains(self, tokens: TokenKey, now: float = 0.0) -> bool:
+        return any(t.store.contains(tokens, now=now) for t in self.tiers)
+
+    # ------------------------------------------------------------------
+    def _maybe_recompress(self, entry: StoreEntry, tier: KVTier) -> None:
+        prof = tier.spec.profile
+        if prof is None or self.recompress is None:
+            return
+        out = self.recompress(entry, prof)
+        if out is None:
+            return
+        payload, wire_bytes = out
+        if int(wire_bytes) >= entry.wire_bytes:
+            return  # demotion re-compression only ever shrinks
+        entry.payload = payload
+        entry.wire_bytes = int(wire_bytes)
+
+    def _place(self, entry: StoreEntry, start: int, now: float,
+               fresh: bool) -> Optional[int]:
+        """Insert ``entry`` at the hottest tier >= ``start`` that accepts
+        it, cascading victims downward.  Returns the tier index stored at,
+        or None when the entry fell off the bottom (fresh put -> rejected;
+        demoted victim -> true eviction)."""
+        i, demoted = start, not fresh
+        while i < len(self.tiers):
+            tier = self.tiers[i]
+            if demoted:
+                self._maybe_recompress(entry, tier)
+            status, evicted = tier.store.try_put_entry(entry)
+            if status == "stored":
+                if demoted:
+                    # The demotion transfer occupies the destination link;
+                    # the entry is invisible until its bytes land.
+                    tr = tier.wire.send(now, entry.wire_bytes)
+                    entry.created = entry.last_used = tr.end
+                for v in evicted:
+                    # A victim only counts as demoted if it actually lands
+                    # somewhere below; falling off the bottom is an
+                    # eviction (counted inside the recursive call).
+                    if self._place(v, i + 1, now, fresh=False) is not None:
+                        self.stats.demotions += 1
+                return i
+            if status == "protected":
+                self.stats.slo_protected += 1
+            i, demoted = i + 1, True
+        if fresh:
+            self.stats.rejected_puts += 1
+        else:
+            self.stats.evictions += 1
+        return None
+
+    # ------------------------------------------------------------------
+    def put(self, tokens: TokenKey, payload: Any, wire_bytes: int,
+            kv_bytes: float = 0.0, workload: str = "",
+            slo_class: str = "standard", now: float = 0.0,
+            tier: int = 0) -> Optional[int]:
+        """Place a fresh entry starting at tier ``tier`` (no link billing —
+        use :meth:`write` to also occupy the tier's wire).  Stale copies of
+        the key anywhere in the hierarchy are dropped first — but a
+        refresh whose placement is rejected everywhere restores the old
+        copy (same rollback rule as the flat store).  Returns the tier
+        index the entry landed at, or None if rejected."""
+        tokens = tuple(tokens)
+        old: Optional[Tuple[KVTier, StoreEntry]] = None
+        for t in self.tiers:
+            e = t.store.discard(tokens)
+            if e is not None:
+                old = (t, e)
+        entry = StoreEntry(tokens=tokens, payload=payload,
+                           wire_bytes=int(wire_bytes), kv_bytes=kv_bytes,
+                           workload=workload, slo_class=slo_class,
+                           created=now, last_used=now)
+        placed = self._place(entry, min(tier, len(self.tiers) - 1), now,
+                             fresh=True)
+        if placed is None and old is not None:
+            # A fully rejected placement mutates no tier store, so the old
+            # copy's slot is still free: putting it back cannot fail.
+            old[0].store.try_put_entry(old[1])
+        return placed
+
+    def write(self, tokens: TokenKey, payload: Any, wire_bytes: int,
+              kv_bytes: float = 0.0, workload: str = "",
+              slo_class: str = "standard", ready: float = 0.0,
+              tier: int = 0) -> WireTransfer:
+        """A pool write: the payload crosses the target tier's serialized
+        link (contending with fetches), and the entry only becomes visible
+        at the transfer's completion time."""
+        ti = min(tier, len(self.tiers) - 1)
+        t = self.tiers[ti]
+        tr = t.wire.send(ready, wire_bytes)
+        self._observe(t, wire_bytes, tr.t_comm)
+        self.put(tokens, payload, wire_bytes, kv_bytes=kv_bytes,
+                 workload=workload, slo_class=slo_class, now=tr.end,
+                 tier=ti)
+        return tr
+
+    # ------------------------------------------------------------------
+    def _observe(self, tier: KVTier, nbytes: float, seconds: float) -> None:
+        # KVWire-attached estimators (the PD runtime shares its transfer
+        # wire with the pool tier) already observed inside send().
+        if (tier.spec.observe_goodput and self.estimator is not None
+                and tier.wire.estimator is None):
+            self.estimator.observe(nbytes, seconds)
+
+    def fetch(self, hit: TierHit, ready: float,
+              promote: bool = True) -> WireTransfer:
+        """Pull a hit's bytes over its tier's serialized link (concurrent
+        fetches queue).  The returned transfer is relative to
+        ``ready + tier.fetch_overhead``; on success the entry is promoted
+        to the hot tier (the bytes just crossed the link — the copy is
+        free, and the entry stays visible from its original write)."""
+        tier = hit.tier
+        tr = tier.wire.send(ready + tier.fetch_overhead,
+                            hit.entry.wire_bytes)
+        self._observe(tier, hit.entry.wire_bytes, tr.t_comm)
+        if promote:
+            self._promote(hit, tr.end)
+        return tr
+
+    def _promote(self, hit: TierHit, now: float) -> None:
+        if hit.tier_index == 0:
+            return
+        tier0 = self.tiers[0]
+        if hit.entry.wire_bytes > tier0.store.capacity_bytes:
+            return  # can never fit the hot tier: stay put
+        e = hit.tier.store.discard(hit.entry.tokens)
+        if e is None:
+            return
+        # Promotion must never make an entry LESS visible: it has been
+        # servable since its original `created` (the source copy would
+        # physically remain until overwritten), so a concurrent lookup at
+        # the same instant still hits.  Only recency moves.
+        e.last_used = now
+        status, evicted = tier0.store.try_put_entry(e)
+        if status != "stored":
+            hit.tier.store.try_put_entry(e)  # roll back where it lived
+            return
+        self.stats.promotions += 1
+        for v in evicted:
+            if self._place(v, 1, now, fresh=False) is not None:
+                self.stats.demotions += 1
+
+    def reencode(self, hit: TierHit, profile: Any) -> bool:
+        """Re-compress a stored entry in place with ``profile`` (the
+        controller's "refetch smaller" route) — capacity accounting on the
+        holding tier follows the shrink."""
+        if self.recompress is None:
+            return False
+        out = self.recompress(hit.entry, profile)
+        if out is None:
+            return False
+        payload, wire_bytes = out
+        if int(wire_bytes) >= hit.entry.wire_bytes:
+            return False
+        hit.tier.store.used_bytes -= hit.entry.wire_bytes - int(wire_bytes)
+        hit.entry.payload = payload
+        hit.entry.wire_bytes = int(wire_bytes)
+        return True
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return sum(len(t.store) for t in self.tiers)
+
+    @property
+    def used_bytes(self) -> int:
+        return sum(t.store.used_bytes for t in self.tiers)
+
+    @property
+    def capacity_bytes(self) -> int:
+        return sum(t.store.capacity_bytes for t in self.tiers)
+
+    @property
+    def free_bytes(self) -> int:
+        return self.capacity_bytes - self.used_bytes
+
+    def entries(self) -> List[StoreEntry]:
+        return [e for t in self.tiers for e in t.store.entries()]
+
+    def summary(self) -> Dict[str, float]:
+        out = {
+            "entries": len(self),
+            "used_bytes": self.used_bytes,
+            "capacity_bytes": self.capacity_bytes,
+            "hit_rate": self.stats.hit_rate,
+            "hits": self.stats.hits,
+            "misses": self.stats.misses,
+            "partial_misses": self.stats.partial_misses,
+            "evictions": self.stats.evictions,
+            "rejected_puts": self.stats.rejected_puts,
+            "promotions": self.stats.promotions,
+            "demotions": self.stats.demotions,
+            "slo_protected": self.stats.slo_protected,
+        }
+        for i, tier in enumerate(self.tiers):
+            out[f"tier{i}_{tier.name}_entries"] = len(tier.store)
+            out[f"tier{i}_{tier.name}_used_bytes"] = tier.store.used_bytes
+            out[f"tier{i}_{tier.name}_hits"] = \
+                self.stats.tier_hits.get(tier.name, 0)
+        return out

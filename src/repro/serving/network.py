@@ -59,7 +59,10 @@ class BandwidthTrace:
 
     def transfer_time(self, start: float, nbytes: float) -> float:
         """Time to push nbytes starting at `start`, integrating over the
-        trace (with optional per-transfer jitter)."""
+        trace (with optional per-transfer jitter).  Zero-rate segments
+        model link outages: the transfer waits them out (nothing moves,
+        time passes); a trailing outage that never recovers yields inf
+        rather than a division by zero."""
         if nbytes <= 0:
             return 0.0
         mult = self._jitter_mult(start, nbytes)
@@ -69,6 +72,12 @@ class BandwidthTrace:
         while True:
             rate = self.values[max(i, 0)] * mult
             seg_end = self.times[i + 1] if i + 1 < len(self.times) else float("inf")
+            if rate <= 0.0:
+                if seg_end == float("inf"):
+                    return float("inf")  # outage never ends: bytes never land
+                t = seg_end             # wait out the outage segment
+                i += 1
+                continue
             dt_seg = seg_end - t
             can = rate * dt_seg
             if can >= remaining or seg_end == float("inf"):
@@ -140,8 +149,8 @@ class GoodputEstimator:
     _est: Optional[float] = None
 
     def observe(self, nbytes: float, seconds: float) -> None:
-        if seconds <= 0 or nbytes <= 0:
-            return
+        if seconds <= 0 or nbytes <= 0 or not np.isfinite(seconds):
+            return  # outage transfers (inf) carry no goodput signal
         goodput = nbytes / seconds
         self._est = goodput if self._est is None else \
             (1 - self.alpha) * self._est + self.alpha * goodput

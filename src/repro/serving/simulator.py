@@ -27,7 +27,7 @@ import numpy as np
 from repro.controller import Decision, ServiceAwareController, ServiceContext
 from repro.controller.latency_model import predicted_latency
 from repro.core.profiles import IDENTITY_PROFILE, Profile
-from repro.serving.kvstore import PrefixKVStore
+from repro.serving.kvstore import PrefixKVStore, StoreEntry, TieredKVStore
 from repro.serving.network import BandwidthTrace, GoodputEstimator
 from repro.serving.request import Request
 from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
@@ -173,15 +173,32 @@ class SimResult:
         return {k: v / n for k, v in out.items()}
 
 
+def _sim_recompress(entry: StoreEntry, profile: Profile
+                    ) -> Optional[Tuple[Profile, int]]:
+    """Byte-accounting demotion re-compression for simulator payloads
+    (the stored payload IS the profile it was compressed with)."""
+    if entry.kv_bytes <= 0:
+        return None
+    wire = int(entry.kv_bytes / max(profile.cr, 1.0))
+    if wire >= entry.wire_bytes:
+        return None
+    return profile, wire
+
+
 class Simulator:
     """Event-driven serving simulator.
 
     Optional serving-runtime integrations (shared with the real-execution
     engine, see DESIGN.md §9):
 
-    * ``store`` — a :class:`PrefixKVStore`; the pool scenario then resolves
-      hits/misses (and capacity eviction) through the store via each
-      request's ``prefix_key`` instead of the static ``prefix_hit`` flag.
+    * ``store`` — a :class:`PrefixKVStore` (flat pool) or a
+      :class:`TieredKVStore` (HBM/DRAM/remote hierarchy); the pool
+      scenario then resolves hits/misses (and capacity eviction /
+      demotion / promotion) through the store via each request's
+      ``prefix_key`` instead of the static ``prefix_hit`` flag.  With a
+      tiered store, fetches and write-backs are routed through the
+      holding tier's serialized link, so concurrent pool traffic
+      contends (hedged fetches apply to the flat path only).
     * ``scheduler`` — a :class:`SchedulerConfig`; requests are then
       dispatched through :class:`ContinuousScheduler` (admission control +
       SLO-class priority order) rather than strict arrival order.
@@ -189,7 +206,7 @@ class Simulator:
 
     def __init__(self, config: SimConfig, policy: Policy,
                  trace: BandwidthTrace, requests: Sequence[Request],
-                 store: Optional[PrefixKVStore] = None,
+                 store: Optional[object] = None,
                  scheduler: Optional[SchedulerConfig] = None):
         self.cfg = config
         self.policy = policy
@@ -200,6 +217,11 @@ class Simulator:
         self.rng = np.random.default_rng(config.seed)
         self.estimator = GoodputEstimator(alpha=config.estimator_alpha,
                                           initial=trace.at(0.0))
+        if isinstance(store, TieredKVStore):
+            if store.estimator is None:
+                store.estimator = self.estimator
+            if store.recompress is None:
+                store.recompress = _sim_recompress
         self.prefill = NodePool.make(config.n_prefill,
                                      config.straggler_sigma, self.rng)
         self.decode = NodePool.make(config.n_decode, config.straggler_sigma,
@@ -366,9 +388,15 @@ class Simulator:
         req.chosen = profile.strategy.short_name()
 
         entry = None
+        hit = None      # TierHit when the store is a TieredKVStore
+        tiered = isinstance(self.store, TieredKVStore)
         if self.store is not None:
             key = req.prefix_key if req.prefix_key is not None else (req.rid,)
-            entry = self.store.lookup(key, now=start)
+            if tiered:
+                hit = self.store.lookup(key, now=start)
+                entry = hit.entry if hit is not None else None
+            else:
+                entry = self.store.lookup(key, now=start)
             recompute = entry is None
         else:
             recompute = not req.prefix_hit
@@ -397,10 +425,21 @@ class Simulator:
                 payload = req.kv_bytes / profile.cr
                 t_c = 0.0 if profile.s_enc == float("inf") \
                     else req.kv_bytes / profile.s_enc
-                t_w = self._transfer(t + t_c, payload)
-                self.store.put(key, profile, int(payload),
-                               kv_bytes=req.kv_bytes, workload=req.workload,
-                               slo_class=req.slo_class, now=t + t_c + t_w)
+                if tiered:
+                    # Routed through the hot tier's serialized link:
+                    # write-backs contend with concurrent fetches.
+                    self.store.write(key, profile, int(payload),
+                                     kv_bytes=req.kv_bytes,
+                                     workload=req.workload,
+                                     slo_class=req.slo_class,
+                                     ready=t + t_c, tier=0)
+                else:
+                    t_w = self._transfer(t + t_c, payload)
+                    self.store.put(key, profile, int(payload),
+                                   kv_bytes=req.kv_bytes,
+                                   workload=req.workload,
+                                   slo_class=req.slo_class,
+                                   now=t + t_c + t_w)
             self.policy.feedback(ctx, decision, req.ttft)
             return
 
@@ -416,20 +455,34 @@ class Simulator:
             v = req.kv_bytes
             payload = v / profile.cr
             t_d = 0.0 if profile.s_dec == float("inf") else v / profile.s_dec
-        t0 = start + cfg.pool_fetch_overhead
-        t_comm = self._transfer(t0, payload)
-        if cfg.hedge_factor > 0:
-            expected = payload / self.estimator.estimate
-            if t_comm > cfg.hedge_factor * expected:
-                # hedged duplicate fetch from a replica
-                t_comm2 = cfg.pool_fetch_overhead + self._transfer(
-                    t0 + cfg.hedge_factor * expected, payload)
-                t_comm = min(t_comm, cfg.hedge_factor * expected + t_comm2)
-                req.retries += 1
+        if hit is not None:
+            # Tiered fetch: the holding tier's serialized link (concurrent
+            # fetches queue — wire_wait is on the critical path); the
+            # fetched entry promotes to the hot tier.  Hedging models
+            # replicated flat pools and does not apply here.
+            overhead = hit.tier.fetch_overhead
+            tr = self.store.fetch(hit, ready=start)
+            t_comm = tr.t_comm
+            req.breakdown["wire_wait"] = tr.t_wait
+            fetch_start = overhead + tr.t_wait
+        else:
+            overhead = cfg.pool_fetch_overhead
+            t0 = start + overhead
+            t_comm = self._transfer(t0, payload)
+            if cfg.hedge_factor > 0:
+                expected = payload / self.estimator.estimate
+                if t_comm > cfg.hedge_factor * expected:
+                    # hedged duplicate fetch from a replica
+                    t_comm2 = cfg.pool_fetch_overhead + self._transfer(
+                        t0 + cfg.hedge_factor * expected, payload)
+                    t_comm = min(t_comm,
+                                 cfg.hedge_factor * expected + t_comm2)
+                    req.retries += 1
+            fetch_start = overhead
         req.breakdown["queue"] = sched_wait
         req.breakdown["comm"] = t_comm
         req.breakdown["decompress"] = t_d
-        fetch_done = start + cfg.pool_fetch_overhead + t_comm + t_d
+        fetch_done = start + fetch_start + t_comm + t_d
         # Coverage of this request's prompt by the stored prefix: by token
         # count for real prefix keys, by KV bytes for synthetic (opaque)
         # keys where the writer's context may be shorter than ours.

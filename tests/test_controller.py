@@ -102,3 +102,56 @@ def test_workload_conditioning(synthetic_profiles):
     # all decisions valid for their own workload's bucket
     for w, d in ds.items():
         assert d.profile.cr == 1.0 or d.profile.q(w) >= 0.90
+
+
+def test_residuals_use_select_time_prediction(synthetic_profiles):
+    """Bugfix (ISSUE 4): the bandit used to recompute predicted_latency
+    from the *observe-time* context, so a bandwidth estimate that drifted
+    between select and observe made the residual correct a prediction
+    nobody acted on.  The residual must be observed - Decision.predicted
+    (select-time), for every drift direction."""
+    from repro.controller.latency_model import predicted_latency
+
+    for drift in (4.0, 0.25):     # estimate rose / fell after the decision
+        c = ServiceAwareController(
+            {w: synthetic_profiles for w in WORKLOADS},
+            use_bandit=True)
+        ctx_sel = _ctx(bandwidth=2e8)
+        d = c.select(ctx_sel)
+        assert d.predicted == pytest.approx(
+            predicted_latency(d.profile, ctx_sel))
+        # EWMA bandwidth shifts before the request finishes
+        ctx_obs = _ctx(bandwidth=2e8 * drift)
+        observed = d.predicted + 0.125   # constant unmodelled overhead
+        c.observe(ctx_obs, d, observed)
+        bandit = c._bandits[("qalike", d.bucket)]
+        res = bandit.residual_of(d.interval, d.profile)
+        alpha = bandit.config.alpha
+        assert res == pytest.approx(alpha * 0.125), \
+            (drift, res, alpha * (observed
+                                  - predicted_latency(d.profile, ctx_obs)))
+
+
+def test_select_fetch_trades_tiers(controller):
+    """Tier-aware fetch routing: a fast near link prefers the stored
+    encoding; a slow link prefers paying a re-encode to cross with fewer
+    bytes ("refetch smaller")."""
+    from repro.controller import TierFetch, tier_fetch_latency
+
+    v = 1e8
+    stored = lambda bw: TierFetch(tier="dram", wire_bytes=v / 2, kv_bytes=v,
+                                  bandwidth=bw, overhead=5e-4, s_dec=1e10)
+    reenc = lambda bw: TierFetch(tier="dram", wire_bytes=v / 16, kv_bytes=v,
+                                 bandwidth=bw, overhead=5e-4, s_enc=3e8,
+                                 s_dec=3e8, variant="reencoded")
+    # fast link: the re-encode time dominates -> fetch as stored
+    d = controller.select_fetch(_ctx(bandwidth=1e10),
+                                [stored(1e10), reenc(1e10)])
+    assert d.option.variant == "stored"
+    assert d.predicted == pytest.approx(tier_fetch_latency(stored(1e10)))
+    # slow link: fewer bytes win despite the encode cost
+    d = controller.select_fetch(_ctx(bandwidth=1e7),
+                                [stored(1e7), reenc(1e7)])
+    assert d.option.variant == "reencoded"
+    assert d.predicted == pytest.approx(tier_fetch_latency(reenc(1e7)))
+    assert controller.select_fetch(_ctx(bandwidth=1e8), []) is None

@@ -139,3 +139,41 @@ def test_contains_respects_write_visibility():
 def test_slo_rank_mapping():
     assert slo_rank("interactive") < slo_rank("standard") < slo_rank("batch")
     assert slo_rank("unknown-class") == slo_rank("standard")
+
+
+def test_put_never_evicts_more_critical_slo_class():
+    """Bugfix (ISSUE 4): a batch-class put used to evict interactive
+    entries.  An insert must never evict an entry of strictly more
+    critical SLO rank — it is rejected (counted) instead, with nothing
+    partially evicted."""
+    store = PrefixKVStore(capacity_bytes=1000)
+    store.put(_toks(0), "i", 600, slo_class="interactive", now=0.0)
+    store.put(_toks(1), "b", 300, slo_class="batch", now=1.0)
+    # batch put needing room: may evict the batch entry, NEVER interactive
+    evicted = store.put(_toks(2), "b2", 500, slo_class="batch", now=2.0)
+    assert evicted == [] and store.stats.rejected_puts == 1
+    assert store.contains(_toks(0), now=2.0)   # interactive survived
+    assert store.contains(_toks(1), now=2.0)   # nothing partially evicted
+    assert store.used_bytes == 900
+    # standard put CAN evict batch (equal-or-lower priority only)
+    evicted = store.put(_toks(3), "s", 400, slo_class="standard", now=3.0)
+    assert [e.payload for e in evicted] == ["b"]
+    assert store.contains(_toks(0), now=3.0)
+    # interactive put can evict anything less critical
+    evicted = store.put(_toks(4), "i2", 400, slo_class="interactive", now=4.0)
+    assert [e.payload for e in evicted] == ["s"]
+
+
+def test_refresh_rolls_back_when_protected():
+    """A same-key refresh that cannot make room without an SLO inversion
+    must leave the original entry in place."""
+    store = PrefixKVStore(capacity_bytes=1000)
+    store.put(_toks(0), "i", 700, slo_class="interactive", now=0.0)
+    store.put(_toks(1), "b_v1", 300, slo_class="batch", now=1.0)
+    # refreshing the batch entry with a bigger payload would need to evict
+    # the interactive entry -> rejected, v1 still stored and accounted
+    evicted = store.put(_toks(1), "b_v2", 600, slo_class="batch", now=2.0)
+    assert evicted == [] and store.stats.rejected_puts == 1
+    entry = store.lookup(_toks(1), now=3.0)
+    assert entry is not None and entry.payload == "b_v1"
+    assert store.used_bytes == 1000

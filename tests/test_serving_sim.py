@@ -134,6 +134,27 @@ def test_bandwidth_trace_integration():
     assert abs(tr.at(0.5) - 100.0) < 1e-9 and abs(tr.at(1.5) - 50.0) < 1e-9
 
 
+def test_bandwidth_trace_outage_segments():
+    """Bugfix (ISSUE 4): a zero-rate segment models a link outage.  The
+    transfer waits it out (no division by zero, no inf mid-trace), and a
+    transfer landing entirely inside the outage resumes at recovery."""
+    tr = BandwidthTrace.steps([(0.0, 100.0), (1.0, 0.0), (3.0, 100.0)])
+    # 150 bytes from t=0: 100 by t=1, stalled until t=3, 50 more by t=3.5
+    assert tr.transfer_time(0.0, 150.0) == pytest.approx(3.5)
+    # a transfer starting mid-outage waits for recovery
+    assert tr.transfer_time(2.0, 100.0) == pytest.approx(2.0)
+    # an outage that never recovers yields inf, not a crash
+    dead = BandwidthTrace.steps([(0.0, 100.0), (1.0, 0.0)])
+    assert dead.transfer_time(0.0, 150.0) == float("inf")
+    assert dead.transfer_time(5.0, 1.0) == float("inf")
+    # ... and the estimator ignores the non-signal
+    from repro.serving.network import GoodputEstimator, KVWire
+    est = GoodputEstimator(initial=123.0)
+    wire = KVWire(dead, est)
+    wire.send(0.0, 150.0)
+    assert est.estimate == 123.0
+
+
 def test_estimator_drift():
     from repro.serving.network import GoodputEstimator
     est = GoodputEstimator(alpha=0.5, initial=100.0)

@@ -1,0 +1,242 @@
+"""Tiered KV hierarchy driven end-to-end: the real-execution runtime and
+the event-driven simulator share one placement/eviction code path, and all
+pool traffic contends on the per-tier serialized links (ISSUE 4)."""
+import numpy as np
+import pytest
+
+from repro.core.profiles import Profile
+from repro.core.strategy import StrategyConfig
+from repro.serving import (
+    BandwidthTrace,
+    GBPS,
+    SchedulerConfig,
+    TierSpec,
+    TieredKVStore,
+)
+
+
+def _profile(cr=2.0, bits=8, codec=None):
+    kw = {"codec": codec} if codec else {}
+    return Profile(StrategyConfig(quantizer="uniform", key_bits=bits,
+                                  value_bits=bits, granularity="per_channel",
+                                  **kw),
+                   cr=cr, s_enc=5e8, s_dec=5e8)
+
+
+def _pool_runtime(reference_model, *, tiers=None, max_prefills=2, **kw):
+    from repro.serving.engine import RuntimeConfig, ServingRuntime
+    # decode_tok_s=20: the decode stream advances the virtual clock well
+    # past each off-path pool write's completion, so repeat prompts find
+    # the entry visible even over the slowest links used here.
+    defaults = dict(
+        static_profile=_profile(),
+        config=RuntimeConfig(seq=48, decode_tokens=4, prefill_tok_s=150.0,
+                             decode_tok_s=20.0, tiers=tiers),
+        trace=BandwidthTrace.constant(0.05 * GBPS),   # 50 Mbps remote
+        scheduler=SchedulerConfig(max_slots=6,
+                                  max_prefills_per_step=max_prefills,
+                                  max_queue=64))
+    defaults.update(kw)
+    rt = ServingRuntime(**defaults)
+    rt.model_cfg, rt.params = reference_model
+    return rt
+
+
+def _remote_only(bandwidth, capacity=64 << 20, overhead=0.002, profile=None):
+    return [TierSpec("remote", capacity, bandwidth=bandwidth,
+                     fetch_overhead=overhead, profile=profile,
+                     observe_goodput=True)]
+
+
+@pytest.mark.slow
+def test_concurrent_pool_fetches_contend_on_wire(reference_model):
+    """Bugfix (ISSUE 4): pool-mode fetches used to bill straight from the
+    trace, so simultaneous fetches never queued.  Two hits admitted in the
+    same iteration now contend on the tier's serialized link: the second
+    books nonzero wire_wait."""
+    rt = _pool_runtime(
+        reference_model,
+        tiers=_remote_only(0.002 * GBPS))   # slow pool link
+    # warm two distinct prefixes
+    rt.submit("qalike", prompt_seed=0)
+    rt.run()
+    rt.submit("codelike", prompt_seed=1)
+    rt.run()
+    n_cold = len(rt.completed)
+    # both hit prompts admitted in ONE iteration (max_prefills=2)
+    rt.submit("qalike", prompt_seed=0)
+    rt.submit("codelike", prompt_seed=1)
+    rt.step()
+    rt.run()
+    hits = [r for r in rt.completed[n_cold:]]
+    assert len(hits) == 2 and all(r.pool_hit for r in hits)
+    waits = sorted(r.breakdown.get("wire_wait", 0.0) for r in hits)
+    assert waits[0] == 0.0 and waits[1] > 0.0
+    # the queued fetch waited out the first transfer's on-wire time
+    first = min(hits, key=lambda r: r.breakdown.get("wire_wait", 0.0))
+    assert waits[1] == pytest.approx(first.breakdown["comm"] - 0.002,
+                                     rel=1e-6)
+    for r in rt.completed:
+        assert sum(r.breakdown.values()) == pytest.approx(r.jct, abs=1e-9)
+
+
+@pytest.mark.slow
+def test_hot_tier_hit_beats_remote_refetch(reference_model):
+    """The tentpole crossover: with an ample hot tier a repeat prompt is
+    served from HBM; with the hot tiers disabled it degrades gracefully to
+    the remote path (still a pool hit, no crash) at a much larger TTFT —
+    which itself still beats cold recomputation."""
+    def hit_ttft(tiers):
+        rt = _pool_runtime(reference_model, tiers=tiers)
+        rt.submit("qalike", prompt_seed=7)
+        rt.run()
+        rt.submit("qalike", prompt_seed=7)
+        rt.run()
+        cold, hit = rt.completed
+        assert not cold.pool_hit and hit.pool_hit
+        return hit.ttft, cold.ttft, rt
+
+    ttft_hot, cold_hot, rt_hot = hit_ttft(None)     # default HBM/DRAM/remote
+    ttft_rem, cold_rem, rt_rem = hit_ttft(
+        [TierSpec("hbm", 0, bandwidth=64e9),
+         TierSpec("dram", 0, bandwidth=8e9, fetch_overhead=5e-4),
+         TierSpec("remote", 64 << 20, bandwidth=0.05 * GBPS,
+                  fetch_overhead=0.002, observe_goodput=True)])
+    assert rt_hot.store.stats.tier_hits.get("hbm") == 1
+    assert rt_rem.store.stats.tier_hits.get("remote") == 1
+    assert ttft_hot < ttft_rem          # hot-tier hit beats remote refetch
+    assert ttft_rem < cold_rem          # remote hit still beats recompute
+
+
+@pytest.mark.slow
+def test_controller_refetches_smaller_over_slow_link(reference_model):
+    """Tier-aware fetch routing in the engine: on a slow pool link the
+    controller's select_fetch trades the stored encoding for a smaller
+    re-encode (the pool tier's demotion profile), and the hit really
+    fetches fewer bytes."""
+    from repro.controller import ServiceAwareController
+    from repro.data.synthetic import WORKLOADS
+
+    q8 = _profile(cr=2.0, bits=8)
+    q4z = _profile(cr=6.0, bits=4, codec="zstd3")
+    controller = ServiceAwareController({w: [q8] for w in WORKLOADS})
+    rt = _pool_runtime(
+        reference_model, static_profile=None, controller=controller,
+        tiers=_remote_only(0.002 * GBPS, profile=q4z))
+    rt.submit("qalike", prompt_seed=3, q_min=0.5)
+    rt.run()
+    rt.submit("qalike", prompt_seed=3, q_min=0.5)
+    rt.run()
+    cold, hit = rt.completed
+    assert hit.pool_hit
+    assert hit.wire_bytes < cold.wire_bytes        # re-encoded smaller
+    assert hit.profile == q4z.strategy.short_name()
+    # the store now holds the smaller encoding, capacity-accounted
+    assert rt.store.used_bytes == hit.wire_bytes
+    # the source-side re-encode is billed ON the critical path (the enc
+    # term the fetch decision traded against), and accounting still sums
+    assert hit.breakdown.get("compress", 0.0) > 0.0
+    assert sum(hit.breakdown.values()) == pytest.approx(hit.jct, abs=1e-9)
+
+
+@pytest.mark.slow
+def test_pd_mode_uses_single_pool_tier_sharing_the_wire(reference_model):
+    """PD default hierarchy: one remote tier whose link IS the PD transfer
+    wire, so pool fetches and cold transfers contend on the same queue."""
+    from repro.serving.engine import RuntimeConfig, ServingRuntime
+    rt = ServingRuntime(
+        static_profile=_profile(),
+        config=RuntimeConfig(seq=48, decode_tokens=4, prefill_tok_s=2000.0,
+                             decode_tok_s=500.0, mode="pd"),
+        trace=BandwidthTrace.constant(1 * GBPS),
+        scheduler=SchedulerConfig(max_slots=4, max_prefills_per_step=2,
+                                  max_queue=32))
+    rt.model_cfg, rt.params = reference_model
+    assert len(rt.store.tiers) == 1
+    assert rt.store.tiers[0].wire is rt.wire
+    rt.submit("qalike", prompt_seed=5)
+    rt.run()
+    rt.submit("qalike", prompt_seed=5)
+    rt.run()
+    cold, hit = rt.completed
+    assert not cold.pool_hit and hit.pool_hit
+    assert rt.wire.transfers == 2       # cold transfer + pool fetch
+
+
+def test_simulator_shares_tiered_store_code_path():
+    """The event-driven simulator drives the SAME TieredKVStore: writes
+    land hot, capacity pressure demotes with byte-accounting
+    re-compression, hits fetch through tier links, and a disabled hot
+    tier degrades to remote-path TTFT instead of crashing."""
+    from repro.serving import Request, SimConfig, Simulator, StaticPolicy
+
+    prof = Profile(StrategyConfig(key_bits=8, value_bits=8), cr=2.0,
+                   s_enc=1e9, s_dec=1e9)
+
+    def run_sim(tiers):
+        store = TieredKVStore(tiers, block=8)
+        reqs = []
+        # 3 writers then 3 re-users of the same prefixes, well spaced so
+        # writes are visible
+        for i in range(3):
+            reqs.append(Request(rid=i, workload="qalike", arrival=10.0 * i,
+                                ctx_tokens=1000, out_tokens=4,
+                                kv_bytes=1e6, q_min=0.0,
+                                prefix_key=(i,)))
+        for i in range(3):
+            reqs.append(Request(rid=3 + i, workload="qalike",
+                                arrival=60.0 + 10.0 * i, ctx_tokens=1000,
+                                out_tokens=4, kv_bytes=1e6, q_min=0.0,
+                                prefix_key=(i,)))
+        res = Simulator(SimConfig(scenario="pool", prefill_tok_s=500.0),
+                        StaticPolicy(prof, "s"),
+                        BandwidthTrace.constant(1e6), reqs,
+                        store=store).run()
+        hits = [r for r in res.requests
+                if r.breakdown.get("comm", 0) > 0
+                and r.breakdown.get("prefill", 0) == 0]
+        colds = [r for r in res.requests if r.breakdown.get("prefill", 0) > 0]
+        return store, hits, colds
+
+    hot = [TierSpec("hbm", 4 << 20, bandwidth=64e9),
+           TierSpec("remote", 64 << 20, bandwidth=1e6, fetch_overhead=2e-3,
+                    observe_goodput=True)]
+    store_h, hits_h, colds_h = run_sim(hot)
+    assert len(hits_h) == 3 and len(colds_h) == 3
+    assert store_h.stats.tier_hits.get("hbm") == 3
+
+    cold_tiers = [TierSpec("hbm", 0, bandwidth=64e9),
+                  TierSpec("remote", 64 << 20, bandwidth=1e6,
+                           fetch_overhead=2e-3, observe_goodput=True)]
+    store_r, hits_r, colds_r = run_sim(cold_tiers)
+    assert len(hits_r) == 3                      # graceful: still pool hits
+    assert store_r.stats.tier_hits.get("remote") == 3
+    # hot-tier hits are (much) faster than remote-path hits
+    assert np.mean([r.ttft for r in hits_h]) \
+        < np.mean([r.ttft for r in hits_r])
+    # ... and remote hits still beat cold recompute
+    assert np.mean([r.ttft for r in hits_r]) \
+        < np.mean([r.ttft for r in colds_r])
+
+
+def test_simulator_tiered_fetches_contend():
+    """Two pool hits arriving together on a slow tier link: the second
+    books wire_wait (pre-fix, simulator fetches never queued)."""
+    from repro.serving import Request, SimConfig, Simulator, StaticPolicy
+
+    prof = Profile(StrategyConfig(key_bits=8, value_bits=8), cr=2.0,
+                   s_enc=1e9, s_dec=1e9)
+    store = TieredKVStore(
+        [TierSpec("remote", 64 << 20, bandwidth=1e5, fetch_overhead=1e-3,
+                  observe_goodput=True)], block=8)
+    store.put((0,), prof, 100_000, kv_bytes=2e5, now=0.0)
+    store.put((1,), prof, 100_000, kv_bytes=2e5, now=0.0)
+    reqs = [Request(rid=i, workload="qalike", arrival=10.0, ctx_tokens=100,
+                    out_tokens=2, kv_bytes=2e5, q_min=0.0, prefix_key=(i,))
+            for i in range(2)]
+    res = Simulator(SimConfig(scenario="pool", prefill_tok_s=1e4),
+                    StaticPolicy(prof, "s"), BandwidthTrace.constant(1e5),
+                    reqs, store=store).run()
+    waits = sorted(r.breakdown.get("wire_wait", 0.0) for r in res.requests)
+    assert waits[0] == 0.0
+    assert waits[1] == pytest.approx(1.0)   # 100 KB over 100 KB/s ahead

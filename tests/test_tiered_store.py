@@ -1,0 +1,236 @@
+"""TieredKVStore: placement cascade, promotion, demotion (with
+re-compression), per-tier serialized fetch links, SLO protection."""
+import pytest
+
+from repro.core.profiles import Profile
+from repro.core.strategy import StrategyConfig
+from repro.serving import (
+    BandwidthTrace,
+    PrefixKVStore,
+    TierSpec,
+    TieredKVStore,
+)
+from repro.serving.network import GoodputEstimator
+
+
+def _toks(i, n=16):
+    return tuple(range(i * 1000, i * 1000 + n))
+
+
+def _profile(cr=8.0):
+    return Profile(StrategyConfig(key_bits=4, value_bits=4), cr=cr,
+                   s_enc=1e9, s_dec=1e9)
+
+
+def _recompress(entry, profile):
+    """Simulator-style byte-accounting re-compression."""
+    wire = int(entry.kv_bytes / profile.cr)
+    return (profile, wire) if wire < entry.wire_bytes else None
+
+
+def _store(hot=1000, dram=2000, remote=10_000, remote_bw=1e6,
+           profile=None, recompress=None, estimator=None):
+    specs = [
+        TierSpec("hbm", hot, bandwidth=1e9),
+        TierSpec("dram", dram, bandwidth=1e8, fetch_overhead=1e-3,
+                 profile=profile),
+        TierSpec("remote", remote, bandwidth=remote_bw, fetch_overhead=2e-3,
+                 profile=profile, observe_goodput=True),
+    ]
+    return TieredKVStore(specs, block=8, recompress=recompress,
+                         estimator=estimator)
+
+
+def test_put_lands_hot_and_pressure_demotes_not_drops():
+    ts = _store()
+    for i in range(3):       # 3 x 600B into a 1000B hot tier
+        assert ts.put(_toks(i), f"p{i}", 600, kv_bytes=600.0,
+                      now=float(i)) == 0
+    assert len(ts) == 3 and ts.stats.demotions == 2
+    assert ts.stats.evictions == 0          # nothing dropped
+    assert len(ts.tiers[0].store) == 1 and len(ts.tiers[1].store) == 2
+    # capacity invariant holds per tier
+    for t in ts.tiers:
+        assert t.store.used_bytes <= t.store.capacity_bytes
+
+
+def test_only_last_tier_truly_evicts():
+    ts = _store(hot=600, dram=600, remote=600)
+    for i in range(4):
+        ts.put(_toks(i), f"p{i}", 600, kv_bytes=600.0, now=float(i))
+    assert ts.stats.evictions == 1          # one fell off the bottom
+    # the drop is NOT double-counted as a demotion (5 victims landed)
+    assert ts.stats.demotions == 5
+    assert len(ts) == 3                     # one per tier
+    assert ts.lookup(_toks(0), now=99.0) is None   # the oldest was dropped
+
+
+def test_zero_capacity_hot_tier_degrades_gracefully():
+    """A disabled (0-byte) hot tier must cascade puts down, not crash."""
+    ts = _store(hot=0, dram=0)
+    assert ts.put(_toks(0), "p", 600, kv_bytes=600.0, now=0.0) == 2
+    hit = ts.lookup(_toks(0), now=1.0)
+    assert hit is not None and hit.tier.name == "remote"
+    # fetch works; promotion is skipped (it can never fit the hot tier)
+    tr = ts.fetch(hit, ready=1.0)
+    assert tr.t_comm > 0 and ts.stats.promotions == 0
+    assert ts.lookup(_toks(0), now=9.0).tier.name == "remote"
+
+
+def test_promotion_on_access():
+    ts = _store()
+    ts.put(_toks(0), "a", 400, kv_bytes=400.0, now=0.0)
+    ts.put(_toks(1), "b", 400, kv_bytes=400.0, now=1.0)
+    ts.put(_toks(2), "c", 400, kv_bytes=400.0, now=2.0)   # demotes "a"
+    hit = ts.lookup(_toks(0), now=10.0)
+    assert hit.tier.name == "dram"
+    ts.fetch(hit, ready=10.0)
+    assert ts.stats.promotions == 1
+    hit2 = ts.lookup(_toks(0), now=20.0)
+    assert hit2.tier.name == "hbm"          # hot again after access
+    assert len(ts) == 3                     # promotion displaced a victim
+
+
+def test_promotion_keeps_entry_visible_at_the_same_instant():
+    """Regression: promotion used to re-stamp `created` to the fetch's
+    end, so a second identical request looking up at the SAME instant
+    missed and recomputed.  The entry has been servable since its
+    original write — only recency moves on promotion."""
+    ts = _store()
+    ts.put(_toks(0), "a", 400, kv_bytes=400.0, now=0.0)
+    ts.put(_toks(1), "b", 400, kv_bytes=400.0, now=1.0)
+    ts.put(_toks(2), "c", 400, kv_bytes=400.0, now=2.0)   # "a" -> dram
+    h1 = ts.lookup(_toks(0), now=10.0)
+    assert h1.tier.name == "dram"
+    ts.fetch(h1, ready=10.0)              # promotes "a" to hbm
+    h2 = ts.lookup(_toks(0), now=10.0)    # same instant, second requester
+    assert h2 is not None and h2.tier.name == "hbm"
+
+
+def test_rejected_refresh_restores_old_copy():
+    """Regression: a refresh rejected at every tier (SLO-protected) used
+    to silently drop the previously stored entry — the tiered path now
+    rolls back like the flat store does."""
+    ts = _store(hot=800, dram=0, remote=0)
+    ts.put(_toks(0), "int", 500, kv_bytes=500.0, slo_class="interactive",
+           now=0.0)
+    ts.put(_toks(1), "b_v1", 300, kv_bytes=300.0, slo_class="batch", now=1.0)
+    # refreshing the batch key with a bigger payload would have to evict
+    # the interactive entry -> rejected everywhere -> v1 must survive
+    placed = ts.put(_toks(1), "b_v2", 600, kv_bytes=600.0,
+                    slo_class="batch", now=2.0)
+    assert placed is None and ts.stats.rejected_puts == 1
+    hit = ts.lookup(_toks(1), now=3.0)
+    assert hit is not None and hit.entry.payload == "b_v1"
+    assert ts.used_bytes == 800
+
+
+def test_demotion_recompresses_with_tier_profile():
+    prof = _profile(cr=8.0)
+    ts = _store(profile=prof, recompress=_recompress)
+    ts.put(_toks(0), "big", 800, kv_bytes=4000.0, now=0.0)
+    ts.put(_toks(1), "newer", 800, kv_bytes=4000.0, now=1.0)  # demotes 0
+    hit = ts.lookup(_toks(0), now=5.0)
+    assert hit.tier.name == "dram"
+    assert hit.entry.wire_bytes == int(4000.0 / 8.0)   # re-encoded smaller
+    assert hit.entry.payload is prof
+    assert ts.tiers[1].store.used_bytes == hit.entry.wire_bytes
+
+
+def test_concurrent_fetches_contend_on_tier_wire():
+    """Two fetches from the same tier serialize: the second books a
+    nonzero queueing wait."""
+    ts = _store(hot=0, dram=0, remote_bw=1000.0)   # 1 KB/s remote link
+    ts.put(_toks(0), "a", 500, kv_bytes=500.0, now=0.0)
+    ts.put(_toks(1), "b", 500, kv_bytes=500.0, now=0.0)
+    h0 = ts.lookup(_toks(0), now=10.0)
+    h1 = ts.lookup(_toks(1), now=10.0)
+    tr0 = ts.fetch(h0, ready=10.0)
+    tr1 = ts.fetch(h1, ready=10.0)
+    assert tr0.t_wait == 0.0 and tr0.t_comm == pytest.approx(0.5)
+    assert tr1.t_wait == pytest.approx(0.5)   # queued behind tr0
+    assert tr1.start >= tr0.end
+
+
+def test_write_routes_through_link_and_visibility():
+    """A pool write occupies the target tier's link and the entry only
+    becomes visible at the transfer's completion (no time-travel hits)."""
+    ts = _store(remote_bw=1000.0)
+    tr = ts.write(_toks(0), "a", 500, kv_bytes=500.0, ready=0.0, tier=2)
+    assert tr.t_comm == pytest.approx(0.5)
+    assert ts.lookup(_toks(0), now=0.1) is None       # still in flight
+    h = ts.lookup(_toks(0), now=tr.end)
+    assert h is not None and h.tier.name == "remote"
+    # a fetch right behind the write queues on the same serialized link
+    ts.write(_toks(1), "b", 500, kv_bytes=500.0, ready=tr.end, tier=2)
+    h = ts.lookup(_toks(0), now=tr.end)
+    tr2 = ts.fetch(h, ready=tr.end)
+    assert tr2.t_wait > 0.0
+
+    # a write cascading past a disabled hot tier still lands (visibility
+    # then follows the demotion hop's transfer on the landing tier)
+    ts0 = _store(hot=0, dram=0, remote_bw=1000.0)
+    ts0.write(_toks(2), "c", 500, kv_bytes=500.0, ready=0.0, tier=0)
+    assert ts0.lookup(_toks(2), now=0.1) is None
+    hit = ts0.lookup(_toks(2), now=2.0)
+    assert hit is not None and hit.tier.name == "remote"
+
+
+def test_demoted_entry_invisible_until_transfer_lands():
+    ts = _store(hot=600, dram=600, remote=10_000, remote_bw=1000.0)
+    ts.put(_toks(0), "a", 500, kv_bytes=500.0, now=0.0)
+    ts.put(_toks(1), "b", 500, kv_bytes=500.0, now=0.0)   # demotes "a"->dram
+    ts.put(_toks(2), "c", 500, kv_bytes=500.0, now=0.0)   # "a"->remote
+    hit = ts.lookup(_toks(0), now=1e-6)
+    assert hit is None            # demotion transfer (0.5 s) still in flight
+    hit = ts.lookup(_toks(0), now=10.0)
+    assert hit is not None and hit.tier.name == "remote"
+
+
+def test_slo_protected_insert_demotes_instead_of_evicting():
+    """A batch insert that would evict an interactive entry at a tier
+    demotes ITSELF down the hierarchy instead."""
+    ts = _store(hot=1000)
+    ts.put(_toks(0), "i", 800, kv_bytes=800.0, slo_class="interactive",
+           now=0.0)
+    placed = ts.put(_toks(1), "b", 800, kv_bytes=800.0, slo_class="batch",
+                    now=1.0)
+    assert placed == 1                       # landed in dram, not rejected
+    assert ts.stats.slo_protected == 1 and ts.stats.evictions == 0
+    assert ts.lookup(_toks(0), now=5.0).tier.name == "hbm"  # untouched
+
+
+def test_wrap_flat_adopts_existing_store():
+    flat = PrefixKVStore(capacity_bytes=2000, block=8)
+    ts = TieredKVStore.wrap_flat(flat, bandwidth=1e6, fetch_overhead=1e-3)
+    ts.put(_toks(0), "a", 500, kv_bytes=500.0, now=0.0)
+    assert len(flat) == 1 and flat.used_bytes == 500   # same backing store
+    hit = ts.lookup(_toks(0), now=1.0)
+    assert hit is not None and flat.stats.hits == 1
+    tr = ts.fetch(hit, ready=1.0)
+    assert tr.t_comm == pytest.approx(500 / 1e6)
+
+
+def test_only_remote_tier_feeds_goodput_estimator():
+    est = GoodputEstimator(alpha=1.0, initial=777.0)
+    ts = _store(remote_bw=1000.0, estimator=est)
+    ts.put(_toks(0), "hot", 500, kv_bytes=500.0, now=0.0)
+    ts.fetch(ts.lookup(_toks(0), now=1.0), ready=1.0)   # hbm fetch
+    assert est.estimate == 777.0            # local tiers don't pollute B
+    ts2 = _store(hot=0, dram=0, remote_bw=1000.0, estimator=est)
+    ts2.put(_toks(1), "cold", 500, kv_bytes=500.0, now=0.0)
+    ts2.fetch(ts2.lookup(_toks(1), now=10.0), ready=10.0)
+    assert est.estimate == pytest.approx(1000.0)        # remote observed
+
+
+def test_summary_aggregates_and_per_tier_detail():
+    ts = _store()
+    ts.put(_toks(0), "a", 400, kv_bytes=400.0, now=0.0)
+    ts.lookup(_toks(0), now=1.0)
+    ts.lookup(_toks(9), now=2.0)
+    s = ts.summary()
+    assert s["entries"] == 1 and s["hits"] == 1 and s["misses"] == 1
+    assert s["hit_rate"] == pytest.approx(0.5)
+    assert s["capacity_bytes"] == 13_000
+    assert s["tier0_hbm_entries"] == 1 and s["tier0_hbm_hits"] == 1
+    assert "tier2_remote_used_bytes" in s
