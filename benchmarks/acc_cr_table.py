@@ -19,10 +19,11 @@ from repro.data.synthetic import WORKLOADS
 from repro.profiling import BOConfig, run_bo
 
 
-def _acc_cr(cfg, ref, head_scores, kv_samples, workloads=tuple(WORKLOADS)):
+def _acc_cr(cfg, ref, head_scores, kv_samples, workloads=tuple(WORKLOADS),
+            n_prompts=4, decode_tokens=12):
     q = evaluate_quality(cfg, workloads=workloads, ref=ref,
-                         head_scores=head_scores, n_prompts=4,
-                         decode_tokens=12)
+                         head_scores=head_scores, n_prompts=n_prompts,
+                         decode_tokens=decode_tokens)
     p = measure_profile(cfg, kv_samples, head_scores=head_scores)
     return q, p.cr
 
@@ -33,22 +34,30 @@ def _bo_best(space, eval_fn, threshold, seed=0):
     return res.best.cfg if res.best else None
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     ref = get_reference_model()
     head_scores = calibrate_head_scores(ref=ref)
     kv_samples = [KVCache.random(4, 2, 192, 32, seed=s) for s in range(2)]
+    qk = dict(n_prompts=2, decode_tokens=8) if smoke else {}
 
     t0 = time.perf_counter()
     methods = {"default": StrategyConfig(key_bits=16, value_bits=16),
                **{k: v for k, v in BASELINES.items()}}
+    if smoke:
+        methods = {"default": methods["default"],
+                   "kivi": BASELINES["kivi"]}
     results = {}
     for name, cfg in methods.items():
-        q, cr = _acc_cr(cfg, ref, head_scores, kv_samples)
+        q, cr = _acc_cr(cfg, ref, head_scores, kv_samples, **qk)
         results[name] = (q, cr)
         row = " ".join(f"{w}={q[w]:.3f}" for w in q)
         emit(f"tab1_{name}", (time.perf_counter() - t0) * 1e6,
              f"cr={cr:.2f} {row} mean_acc={np.mean(list(q.values())):.3f}")
         t0 = time.perf_counter()
+    if smoke:
+        # the BO searches below re-evaluate quality per candidate — the
+        # smoke path stops at the baseline table
+        return
 
     # KVServe-Unified: one search over the mixed workloads
     space = enumerate_space("module")

@@ -25,23 +25,28 @@ def _objective(cfg):
     return acc, cr
 
 
-def run() -> None:
-    space = enumerate_space("hybrid")
+def run(smoke: bool = False) -> None:
+    # smoke: the module-granularity space and a short budget keep the CI
+    # path seconds-cheap while still exercising the full BO loop
+    space = enumerate_space("module" if smoke else "hybrid")
+    iters = 40 if smoke else 300
     thres = 0.95
     feas = [(c, _objective(c)) for c in space if _objective(c)[0] >= thres]
     true_best = max(v[1] for _, v in feas)
 
     variants = {
-        "full": BOConfig(acc_threshold=thres, max_iters=300, seed=2),
-        "wo_enc": BOConfig(acc_threshold=thres, max_iters=300, seed=2,
+        "full": BOConfig(acc_threshold=thres, max_iters=iters, seed=2),
+        "wo_enc": BOConfig(acc_threshold=thres, max_iters=iters, seed=2,
                            use_encoding=False),
-        "wo_exp": BOConfig(acc_threshold=thres, max_iters=300, seed=2,
+        "wo_exp": BOConfig(acc_threshold=thres, max_iters=iters, seed=2,
                            use_exploration=False),
-        "wo_prune": BOConfig(acc_threshold=thres, max_iters=300, seed=2,
+        "wo_prune": BOConfig(acc_threshold=thres, max_iters=iters, seed=2,
                              use_pruning=False),
-        "wo_stop": BOConfig(acc_threshold=thres, max_iters=300, seed=2,
+        "wo_stop": BOConfig(acc_threshold=thres, max_iters=iters, seed=2,
                             use_early_stop=False),
     }
+    if smoke:
+        variants = {"full": variants["full"]}
     for name, cfg in variants.items():
         t0 = time.perf_counter()
         res = run_bo(space, _objective, cfg)
@@ -53,10 +58,10 @@ def run() -> None:
 
     t0 = time.perf_counter()
     rnd = run_random_search(space, _objective,
-                            BOConfig(acc_threshold=thres, max_iters=300,
+                            BOConfig(acc_threshold=thres, max_iters=iters,
                                      seed=2))
     emit("fig16l_random", (time.perf_counter() - t0) * 1e6,
-         f"best_cr={rnd.best_cr():.2f} true={true_best:.2f} iters=300")
+         f"best_cr={rnd.best_cr():.2f} true={true_best:.2f} iters={iters}")
 
     # Fig 9 headline: search-overhead reduction vs exhaustive profiling.
     full = run_bo(space, _objective, variants["full"])

@@ -1,0 +1,228 @@
+"""Multi-worker cluster runtime: scale-out throughput + routing policy
+sweep (ISSUE 5 tentpole).
+
+Three deterministic claims about the
+:class:`~repro.serving.cluster.ClusterRuntime` (virtual clock => every
+assert is exact):
+
+  1. **Scale-out** — under saturating offered load a 2x2 cluster (two
+     prefill workers, two decode arenas, a 2x2 link mesh) sustains
+     >= 1.8x the completed-request throughput of the 1x1 runtime.
+  2. **Load-aware routing** — on a heterogeneous topology (one 1 Gbps and
+     one 50 Mbps link) the predicted-latency argmin router yields
+     strictly lower mean JCT than round-robin placement, by keeping KV
+     transfers off the slow wire (per-link goodput estimators are seeded
+     from each link's OWN configured trace).
+  3. **1x1 degeneracy** — a 1x1 ClusterRuntime reproduces the pinned PR-1
+     token fixture bit-for-bit in BOTH ``pool`` and ``pd`` modes (and
+     matches a live ServingRuntime run even when the trained reference
+     model differs from the fixture's).
+
+Emitted rows include the tail metrics (p50/p95/p99 TTFT and JCT) of each
+configuration, not just means.
+
+CLI: ``--smoke`` shrinks to CI-sized settings; ``--json PATH`` archives
+the emitted rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from benchmarks.common import emit, write_json
+from repro.serving import (
+    BandwidthTrace,
+    GBPS,
+    NetworkTopology,
+    SchedulerConfig,
+)
+
+WORKLOAD_CYCLE = ("qalike", "codelike", "mathlike", "summlike")
+
+
+def _profile():
+    from repro.core.profiles import Profile
+    from repro.core.strategy import StrategyConfig
+    return Profile(StrategyConfig(quantizer="uniform", key_bits=8,
+                                  value_bits=8, granularity="per_channel"),
+                   cr=2.0, s_enc=5e8, s_dec=5e8)
+
+
+def _cluster(*, mode="pd", seq, decode_tokens, n_prefill=1, n_decode=1,
+             router="load_aware", topology=None, bandwidth=1 * GBPS,
+             prefill_tok_s=200.0, max_prefills=1, max_slots=4):
+    from repro.serving.cluster import ClusterRuntime
+    from repro.serving.engine import RuntimeConfig
+    return ClusterRuntime(
+        static_profile=_profile(),
+        config=RuntimeConfig(seq=seq, decode_tokens=decode_tokens,
+                             prefill_tok_s=prefill_tok_s,
+                             decode_tok_s=500.0, mode=mode),
+        trace=BandwidthTrace.constant(bandwidth),
+        scheduler=SchedulerConfig(max_slots=max_slots,
+                                  max_prefills_per_step=max_prefills,
+                                  max_queue=1024),
+        topology=topology, n_prefill=n_prefill, n_decode=n_decode,
+        router=router)
+
+
+def _tails(summary) -> str:
+    keys = ("ttft_p50", "ttft_p95", "ttft_p99", "jct_p50", "jct_p95",
+            "jct_p99")
+    return " ".join(f"{k}={summary[k]:.4f}" for k in keys if k in summary)
+
+
+# ---------------------------------------------------------------------------
+# 1) scale-out throughput
+# ---------------------------------------------------------------------------
+def _throughput(n_prefill: int, n_decode: int, n_requests: int, seq: int
+                ) -> Tuple[float, object]:
+    rt = _cluster(mode="pd", seq=seq, decode_tokens=3,
+                  n_prefill=n_prefill, n_decode=n_decode)
+    for i in range(n_requests):
+        # distinct prompts: a genuinely cold, saturating stream
+        rt.submit(WORKLOAD_CYCLE[i % 4], prompt_seed=500 + 11 * i,
+                  out_tokens=1)
+    done = rt.run()
+    assert len(done) == n_requests, "saturating load must fully drain"
+    return n_requests / rt.clock, rt
+
+
+def run_scaling(n_requests: int, seq: int) -> None:
+    t0 = time.perf_counter()
+    thr11, rt11 = _throughput(1, 1, n_requests, seq)
+    thr22, rt22 = _throughput(2, 2, n_requests, seq)
+    ratio = thr22 / thr11
+    us = (time.perf_counter() - t0) * 1e6
+    emit("cluster_throughput_1x1", us,
+         f"rps={thr11:.3f} " + _tails(rt11.summary()))
+    emit("cluster_throughput_2x2", 0.0,
+         f"rps={thr22:.3f} scaling={ratio:.2f}x " + _tails(rt22.summary()))
+    # Acceptance: near-linear scale-out of the prefill-bound regime.
+    assert ratio >= 1.8, (thr11, thr22)
+    # both prefill workers really shared the load
+    by_pw = {}
+    for r in rt22.completed:
+        pw = r.route.split("->")[0]
+        by_pw[pw] = by_pw.get(pw, 0) + 1
+    assert set(by_pw) == {"p0", "p1"}, by_pw
+
+
+# ---------------------------------------------------------------------------
+# 2) routing policy on a heterogeneous mesh
+# ---------------------------------------------------------------------------
+def _routed_jct(router: str, n: int, seq: int) -> Tuple[float, int, dict]:
+    slow = BandwidthTrace.constant(0.05 * GBPS)     # the 50 Mbps wire
+    topo = NetworkTopology.full_mesh(
+        1, 2, BandwidthTrace.constant(1 * GBPS), links={(0, 1): slow})
+    rt = _cluster(mode="pd", seq=seq, decode_tokens=3, n_prefill=1,
+                  n_decode=2, router=router, topology=topo,
+                  prefill_tok_s=2000.0, max_slots=6)
+    for i in range(n):
+        rt.submit(WORKLOAD_CYCLE[i % 4], prompt_seed=900 + 7 * i,
+                  out_tokens=1)
+        rt.step()
+    done = rt.run()
+    assert len(done) == n and all(not r.pool_hit for r in done)
+    slow_share = sum(1 for r in done if r.route == "p0->d1")
+    return (float(np.mean([r.jct for r in done])), slow_share,
+            rt.summary())
+
+
+def run_routing(n: int, seq: int) -> None:
+    t0 = time.perf_counter()
+    jct_rr, slow_rr, sum_rr = _routed_jct("round_robin", n, seq)
+    jct_la, slow_la, sum_la = _routed_jct("load_aware", n, seq)
+    us = (time.perf_counter() - t0) * 1e6
+    emit("cluster_routing_round_robin", us,
+         f"mean_jct={jct_rr:.4f}s slow_link_requests={slow_rr} "
+         + _tails(sum_rr))
+    emit("cluster_routing_load_aware", 0.0,
+         f"mean_jct={jct_la:.4f}s slow_link_requests={slow_la} "
+         f"gain={jct_rr / jct_la:.2f}x " + _tails(sum_la))
+    # Acceptance: load-aware placement strictly beats round-robin on the
+    # heterogeneous mesh, by avoiding the 50 Mbps wire.
+    assert jct_la < jct_rr, (jct_la, jct_rr)
+    assert slow_la < slow_rr, (slow_la, slow_rr)
+
+
+# ---------------------------------------------------------------------------
+# 3) 1x1 degeneracy: pinned PR-1 fixture, both modes
+# ---------------------------------------------------------------------------
+def run_parity() -> None:
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tests"))
+    from _runtime_scenario import FIXTURE, params_digest, run_scenario
+    from repro.serving.cluster import ClusterRuntime
+    from repro.serving.engine import RuntimeConfig, ServingRuntime
+
+    fix = json.loads(FIXTURE.read_text())
+
+    def build(cls, mode: str, **kw):
+        return cls(
+            static_profile=_profile(),
+            config=RuntimeConfig(seq=64, decode_tokens=6,
+                                 prefill_tok_s=2000.0, decode_tok_s=500.0,
+                                 mode=mode),
+            trace=BandwidthTrace.constant(1 * GBPS),
+            scheduler=SchedulerConfig(max_slots=6, max_prefills_per_step=2,
+                                      max_queue=32), **kw)
+
+    for mode in ("pool", "pd"):
+        t0 = time.perf_counter()
+        rt = build(ClusterRuntime, mode, n_prefill=1, n_decode=1)
+        out = run_scenario(rt)
+        against_fixture = params_digest(rt.params) == fix["params_digest"]
+        if against_fixture:
+            ref = fix["outputs"]
+        else:
+            # CI-sized reference model (digest mismatch): the pinned
+            # tokens don't apply, so this degrades to a determinism/
+            # facade-consistency check against a live 1x1 ServingRuntime
+            # — which shares the ClusterRuntime code path, so it can NOT
+            # catch a regression vs the PR-1 tokens.  The real parity
+            # gate is the fixture branch (runs wherever the full
+            # reference model is available, e.g. locally and in the
+            # pinned-fixture tests).
+            ref = run_scenario(build(ServingRuntime, mode))
+        assert set(out) == set(ref)
+        for rid, rec in ref.items():
+            assert out[rid]["pool_hit"] == rec["pool_hit"], (mode, rid)
+            assert out[rid]["tokens"] == rec["tokens"], (mode, rid)
+        emit(f"cluster_1x1_parity_{mode}",
+             (time.perf_counter() - t0) * 1e6,
+             f"requests={len(out)} "
+             + ("token_exact=True vs=pinned_fixture" if against_fixture
+                else "consistent=True vs=live_1x1 (fixture digest "
+                     "mismatch: parity not provable here)"))
+
+
+# ---------------------------------------------------------------------------
+def run(smoke: bool = False) -> None:
+    n_requests = 8 if smoke else 16
+    seq = 48 if smoke else 96
+    run_scaling(n_requests, seq)
+    run_routing(6 if smoke else 12, seq)
+    run_parity()
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized settings; crash = fail")
+    ap.add_argument("--json", default="",
+                    help="archive emitted rows to this JSON path")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke)
+    if args.json:
+        write_json(args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

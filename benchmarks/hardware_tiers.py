@@ -27,12 +27,14 @@ TIERS = {
 }
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     profiles = cached_profiles()
     kivi = next(p for p in profiles if "kivi" in p.strategy.short_name())
-    reqs = lambda: WorkloadMix(rate=2.0, seed=4, q_min=0.0).generate(30)
+    n = 12 if smoke else 30
+    reqs = lambda: WorkloadMix(rate=2.0, seed=4, q_min=0.0).generate(n)
+    tiers = dict(list(TIERS.items())[::2]) if smoke else TIERS
 
-    for tier, (bw, ptok) in TIERS.items():
+    for tier, (bw, ptok) in tiers.items():
         t0 = time.perf_counter()
         cfg = SimConfig(prefill_tok_s=ptok)
         trace = lambda: BandwidthTrace.constant(bw * GBPS)

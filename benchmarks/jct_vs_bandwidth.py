@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,10 +52,12 @@ def _wire_profiles():
 
 def _mean_jct(trace: BandwidthTrace, n_requests: int, seq: int,
               decode_tokens: int, controller=None,
-              static_profile: Optional[Profile] = None) -> float:
+              static_profile: Optional[Profile] = None
+              ) -> Tuple[float, Dict[str, float]]:
     """Drive the continuous PD runtime through a cold-request stream (all
-    distinct prompts => every request crosses the wire) and return mean
-    JCT."""
+    distinct prompts => every request crosses the wire).  Returns
+    ``(mean_jct, summary)`` — the summary carries the p50/p95/p99 tails
+    and violation rates."""
     from repro.serving.engine import RuntimeConfig, ServingRuntime
 
     rt = ServingRuntime(
@@ -74,7 +76,7 @@ def _mean_jct(trace: BandwidthTrace, n_requests: int, seq: int,
     assert len(done) == n_requests
     assert all(not r.pool_hit for r in done)       # cold stream
     assert rt.wire.transfers == n_requests         # every KV crossed the wire
-    return float(np.mean([r.jct for r in done]))
+    return float(np.mean([r.jct for r in done])), rt.summary()
 
 
 def run(smoke: bool = False) -> None:
@@ -90,18 +92,26 @@ def run(smoke: bool = False) -> None:
                                          decode_tokens, **kw)
         t0 = time.perf_counter()
         res: Dict[str, float] = {}
-        res["default"] = run_one(static_profile=IDENTITY_PROFILE)
-        res["q8"] = run_one(static_profile=q8)
-        res["q4zstd"] = run_one(static_profile=q4z)
+        tails: Dict[str, Dict[str, float]] = {}
+        res["default"], tails["default"] = run_one(
+            static_profile=IDENTITY_PROFILE)
+        res["q8"], tails["q8"] = run_one(static_profile=q8)
+        res["q4zstd"], tails["q4zstd"] = run_one(static_profile=q4z)
         controller = ServiceAwareController(
             {w: [q8, q4z] for w in WORKLOADS})
-        res["kvserve"] = run_one(controller=controller)
+        res["kvserve"], tails["kvserve"] = run_one(controller=controller)
         elapsed = (time.perf_counter() - t0) * 1e6
         speedup = res["default"] / res["kvserve"]
         emit(f"fig13_pd_jct_bw{bw:g}gbps", elapsed,
              f"default={res['default']:.3f}s q8={res['q8']:.3f}s "
              f"q4zstd={res['q4zstd']:.3f}s kvserve={res['kvserve']:.3f}s "
              f"speedup={speedup:.2f}x")
+        # Tail metrics (ISSUE 5 satellite): the SLO story lives in the
+        # distribution, not the mean.
+        emit(f"fig13_pd_tails_bw{bw:g}gbps", 0.0,
+             " ".join(f"{name}_jct_p{p}={tails[name][f'jct_p{p}']:.4f}"
+                      for name in ("default", "kvserve")
+                      for p in (50, 95, 99)))
 
         # Acceptance: compression pays under scarce bandwidth, identity
         # wins when the wire is free (deterministic — virtual clock).

@@ -14,9 +14,9 @@ from repro.core import codecs
 from repro.kernels import ops as K
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     rng = np.random.default_rng(0)
-    t, d, g = 2048, 128, 64
+    t, d, g = (512, 128, 64) if smoke else (2048, 128, 64)
     x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
 
     for bits in (8, 4):
@@ -35,7 +35,7 @@ def run() -> None:
     tpu_us = max(flops / 197e12, (2 * t * d * 2) / 819e9) * 1e6
     emit("kernel_hadamard", us, f"modeled_tpu_us={tpu_us:.2f} flops={flops}")
 
-    b, hkv, gq, s = 2, 2, 4, 1024
+    b, hkv, gq, s = (1, 2, 4, 256) if smoke else (2, 2, 4, 1024)
     q = jnp.asarray(rng.standard_normal((b, hkv, gq, d)), jnp.float32)
     k8, ks = K.quantize_ref(jnp.asarray(
         rng.standard_normal((b, hkv, s, d)), jnp.float32), 8, g)
@@ -50,7 +50,8 @@ def run() -> None:
          f"modeled_tpu_us={kv_bytes_int8/819e9*1e6:.2f}")
 
     # host codec throughput (the real network-path codec)
-    codes = rng.integers(0, 16, size=4 << 20, dtype=np.uint8)
+    codes = rng.integers(0, 16, size=(1 << 20) if smoke else (4 << 20),
+                         dtype=np.uint8)
     for codec in ("none", "zstd3", "bitshuffle_zstd3"):
         t0 = time.perf_counter()
         buf = codecs.encode_codes(codes, 4, codec)

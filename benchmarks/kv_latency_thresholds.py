@@ -13,7 +13,9 @@ from repro.controller import bandwidth_threshold, normalized_latency
 from repro.serving.network import GBPS
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    # analytic once the profile set is cached: the smoke path IS the
+    # full path
     profiles = cached_profiles()
     named = {}
     for p in profiles:

@@ -19,13 +19,14 @@ from repro.serving import (
 )
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     profiles = cached_profiles()
     kivi = next(p for p in profiles if "kivi" in p.strategy.short_name())
     cachegen = next(p for p in profiles
                     if "cachegen" in p.strategy.short_name())
     trace = lambda: BandwidthTrace.constant(0.1 * GBPS)
-    reqs = lambda: WorkloadMix(rate=2.0, seed=2, q_min=0.0).generate(30)
+    n = 12 if smoke else 30
+    reqs = lambda: WorkloadMix(rate=2.0, seed=2, q_min=0.0).generate(n)
 
     policies = {
         "default": NoCompressionPolicy(),

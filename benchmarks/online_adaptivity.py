@@ -27,9 +27,10 @@ def _trace():
         jitter=0.25, seed=5)
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     profiles = cached_profiles()
-    reqs = lambda: WorkloadMix(rate=1.2, seed=3, q_min=0.0).generate(70)
+    n = 30 if smoke else 70
+    reqs = lambda: WorkloadMix(rate=1.2, seed=3, q_min=0.0).generate(n)
 
     variants = {
         "kvserve": dict(use_bandit=True, use_envelope=True),

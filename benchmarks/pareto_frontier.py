@@ -8,7 +8,9 @@ from repro.data.synthetic import WORKLOADS
 from repro.profiling import frontier_from_profiles
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    # frontier extraction over the cached profile set is already cheap:
+    # the smoke path IS the full path
     profiles = cached_profiles()
     for w in WORKLOADS:
         t0 = time.perf_counter()

@@ -12,28 +12,30 @@ from repro.core.quality import evaluate_quality, get_reference_model
 from repro.core.strategy import BASELINES
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     ref = get_reference_model()
 
     # Obs 1: accuracy on growing sample sizes converges to the full value.
     t0 = time.perf_counter()
     cfg = BASELINES["kivi"]
+    n_full = 5 if smoke else 10
+    subsets = (2, 3, 4) if smoke else (2, 4, 6)
     full = np.mean(list(evaluate_quality(
-        cfg, ref=ref, n_prompts=10, decode_tokens=12, seed=3).values()))
+        cfg, ref=ref, n_prompts=n_full, decode_tokens=12, seed=3).values()))
     errs = []
-    for n in (2, 4, 6):
+    for n in subsets:
         sub = np.mean(list(evaluate_quality(
             cfg, ref=ref, n_prompts=n, decode_tokens=12, seed=3).values()))
         errs.append(abs(sub - full))
     emit("fig8_sampled_acc", (time.perf_counter() - t0) * 1e6,
-         f"full={full:.3f} err_n2={errs[0]:.3f} err_n4={errs[1]:.3f} "
-         f"err_n6={errs[2]:.3f}")
+         f"full={full:.3f} " + " ".join(
+             f"err_n{n}={e:.3f}" for n, e in zip(subsets, errs)))
 
     # Obs 2: CR rankings invariant across different request contents.
     t0 = time.perf_counter()
     cfgs = [BASELINES["kivi"], BASELINES["cachegen"], BASELINES["mixhq"]]
     rankings = []
-    for seed in range(5):
+    for seed in range(3 if smoke else 5):
         kv = KVCache.random(4, 2, 160, 32, seed=seed)
         crs = [CompressionPipeline(c).compress(kv).compression_ratio()
                for c in cfgs]

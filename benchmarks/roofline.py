@@ -21,7 +21,9 @@ def _rows(path: Path):
     return [json.loads(l) for l in path.open() if l.strip()]
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    # reads pre-computed dry-run artifacts (or reports them missing):
+    # the smoke path IS the full path
     for mesh_name, fname in (("single", "dryrun_single.jsonl"),
                              ("multi", "dryrun_multi.jsonl")):
         rows = [r for r in _rows(ROOT / fname) if r.get("status") == "ok"]

@@ -1,11 +1,17 @@
 """Benchmark harness: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only fig13,...]``
+``PYTHONPATH=src python -m benchmarks.run [--only fig13,...] [--smoke]``
 prints ``name,us_per_call,derived`` CSV rows.
+
+``--all --smoke`` executes EVERY registered benchmark's smoke path
+(CI-sized settings; each suite's deterministic asserts still run, so a
+crash or a violated acceptance bound fails the harness).  ``--json PATH``
+archives every emitted row for the CI artifact.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -25,6 +31,7 @@ SUITES = [
     ("fig12_hardware_tiers", "benchmarks.hardware_tiers"),
     ("serving_continuous_batching", "benchmarks.continuous_batching"),
     ("serving_tiered_kv", "benchmarks.tiered_kv"),
+    ("serving_cluster_scaling", "benchmarks.cluster_scaling"),
     ("kernels", "benchmarks.kernel_throughput"),
     ("roofline", "benchmarks.roofline"),
 ]
@@ -33,23 +40,48 @@ SUITES = [
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list of suite prefixes")
+    ap.add_argument("--all", action="store_true",
+                    help="run every registered suite (explicit form of the "
+                         "default; combine with --smoke for the CI sweep)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized settings for every suite that supports "
+                         "them; a crash or violated assert fails the run")
+    ap.add_argument("--skip", default="",
+                    help="comma list of suite prefixes to leave out (CI "
+                         "uses this to avoid re-running suites already "
+                         "executed as dedicated steps)")
+    ap.add_argument("--json", default="",
+                    help="archive all emitted rows to this JSON path")
     args = ap.parse_args(argv)
+    if args.all and args.only:
+        ap.error("--all and --only are mutually exclusive")
     only = [s for s in args.only.split(",") if s]
+    skip = [s for s in args.skip.split(",") if s]
 
     print("name,us_per_call,derived")
     failures = 0
     for name, module in SUITES:
         if only and not any(name.startswith(o) or o in name for o in only):
             continue
+        if skip and any(name.startswith(s) or s in name for s in skip):
+            print(f"# suite {name} skipped (--skip)")
+            continue
         t0 = time.time()
         try:
             mod = __import__(module, fromlist=["run"])
-            mod.run()
+            kwargs = {}
+            if args.smoke and \
+                    "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            mod.run(**kwargs)
             print(f"# suite {name} done in {time.time()-t0:.1f}s")
         except Exception as e:
             failures += 1
             print(f"# suite {name} FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+    if args.json:
+        from benchmarks.common import write_json
+        write_json(args.json)
     return 1 if failures else 0
 
 

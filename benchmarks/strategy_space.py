@@ -11,7 +11,8 @@ from repro.core.strategy import space_sizes
 from repro.profiling.pareto import profile_latency
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    # space enumeration + scatter over cached profiles: already CI-cheap
     t0 = time.perf_counter()
     sizes = space_sizes()
     emit("fig5_space_sizes", (time.perf_counter() - t0) * 1e6,

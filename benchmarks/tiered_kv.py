@@ -120,6 +120,14 @@ def run(smoke: bool = False) -> None:
              f"remote_hits={s.tier_hits.get('remote', 0)} "
              f"promotions={s.promotions} demotions={s.demotions} "
              f"evictions={s.evictions}")
+        # Tail metrics (ISSUE 5 satellite): TTFT/JCT distribution, not
+        # just the per-wave means.
+        rs = rt.summary()
+        emit(f"tiered_tails_{name}", 0.0,
+             " ".join(f"{k}={rs[k]*1e3:.3f}ms"
+                      for k in ("ttft_p50", "ttft_p95", "ttft_p99",
+                                "jct_p50", "jct_p95", "jct_p99")
+                      if k in rs))
 
         # ---- deterministic acceptance (virtual clock) ----
         if name == "hot_ample":

@@ -25,7 +25,7 @@ from repro.serving import (
 )
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     profiles = cached_profiles()
     cachegen = next(p for p in profiles
                     if "cachegen" in p.strategy.short_name())
@@ -35,19 +35,22 @@ def run() -> None:
     cfg = SimConfig(scenario="pool", prefill_tok_s=150.0)
     mk = lambda hit: WorkloadMix(rate=0.5, seed=1, slo=45.0, q_min=0.0,
                                  prefix_hit_rate=hit)
+    bandwidths = (0.04, 0.3) if smoke else (0.04, 0.06, 0.08, 0.12, 0.3,
+                                            0.6)
+    n = 20 if smoke else 40
 
-    for bw in (0.04, 0.06, 0.08, 0.12, 0.3, 0.6):
+    for bw in bandwidths:
         trace = BandwidthTrace.constant(bw * GBPS)
         t0 = time.perf_counter()
         # "Default" = no prefix reuse: always recompute
         res_def = Simulator(cfg, NoCompressionPolicy(), trace,
-                            mk(0.0).generate(40)).run()
+                            mk(0.0).generate(n)).run()
         res_cg = Simulator(cfg, StaticPolicy(cachegen, "cg",
                                              slo_fallback_recompute=True),
-                           trace, mk(1.0).generate(40)).run()
+                           trace, mk(1.0).generate(n)).run()
         controller = ServiceAwareController({w: profiles for w in WORKLOADS})
         res_kv = Simulator(cfg, KVServePolicy(controller), trace,
-                           mk(1.0).generate(40)).run()
+                           mk(1.0).generate(n)).run()
         us = (time.perf_counter() - t0) * 1e6
         emit(f"fig14_ttft_bw{bw}gbps", us,
              f"recompute={res_def.mean_ttft():.2f}s "

@@ -63,15 +63,34 @@ class ServiceAwareController:
         self.buckets = buckets
         self.use_bandit = use_bandit
         self.use_envelope = use_envelope
-        # Per (workload, bucket): lower envelope built offline.
+        self._bandit_config = bandit_config
+        # Per (workload, bucket): lower envelope built offline.  Envelopes
+        # are route-independent (profiles are an offline property); bandit
+        # state is NOT — see _bandit_for.
         self._envelopes: Dict[Tuple[str, int], LowerEnvelope] = {}
-        self._bandits: Dict[Tuple[str, int], ResidualBandit] = {}
+        self._bandits: Dict[Tuple[str, int, str], ResidualBandit] = {}
         self._profiles = profiles_by_workload
         for w, profs in profiles_by_workload.items():
             for bi, q_floor in enumerate(buckets):
                 eligible = [p for p in profs if p.q(w) >= q_floor]
                 self._envelopes[(w, bi)] = build_envelope(eligible)
-                self._bandits[(w, bi)] = ResidualBandit(bandit_config)
+                self._bandits[(w, bi, "")] = ResidualBandit(bandit_config)
+
+    # ------------------------------------------------------------------
+    def _bandit_for(self, workload: str, bucket: int,
+                    route: str) -> ResidualBandit:
+        """Per-(workload, bucket, route) residual bandit, created lazily
+        for routes first seen online: each link of a multi-worker cluster
+        drifts independently (congestion, outages), so its residual
+        corrections must not be polluted by other links' observations.
+        Route "" (single-link deployments) keeps the offline-built state.
+        """
+        key = (workload, bucket, route)
+        bandit = self._bandits.get(key)
+        if bandit is None:
+            bandit = ResidualBandit(self._bandit_config)
+            self._bandits[key] = bandit
+        return bandit
 
     # ------------------------------------------------------------------
     def _bucket_of(self, q_min: float) -> int:
@@ -88,6 +107,20 @@ class ServiceAwareController:
         return best
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _eligible_candidates(env: LowerEnvelope, x: float,
+                             ctx: ServiceContext) -> List[Profile]:
+        """The envelope's neighbour candidate set, filtered by Theorem 6.1
+        (drop non-beneficial profiles at the current bandwidth) and by the
+        request's OWN q_min (not just the bucket floor: a q_min above the
+        top floor must not admit profiles below it).  Shared by ``select``
+        and ``predict`` so routing scores the same candidate set selection
+        draws from."""
+        candidates = [p for p in env.candidates(x, n_neighbors=1)
+                      if (p.cr <= 1.0 or is_beneficial(p, ctx.bandwidth))
+                      and (p.cr <= 1.0 or p.q(ctx.workload) >= ctx.q_min)]
+        return candidates or [IDENTITY_PROFILE]
+
     def select(self, ctx: ServiceContext) -> Decision:
         bucket = self._bucket_of(ctx.q_min)
         env = self._envelopes.get((ctx.workload, bucket))
@@ -105,19 +138,10 @@ class ServiceAwareController:
             return Decision(p, 0, bucket, predicted_latency(p, ctx), [p])
 
         interval = env.optimal_index(x)
-        candidates = env.candidates(x, n_neighbors=1)
-        # Theorem 6.1: drop non-beneficial profiles at the current bandwidth.
-        # Eligibility is re-checked against the request's own q_min, not
-        # just the bucket floor: a q_min above the bucket floor (e.g. 1.0,
-        # above every floor) must not admit profiles below it.
-        candidates = [p for p in candidates
-                      if (p.cr <= 1.0 or is_beneficial(p, ctx.bandwidth))
-                      and (p.cr <= 1.0 or p.q(ctx.workload) >= ctx.q_min)]
-        if not candidates:
-            candidates = [IDENTITY_PROFILE]
+        candidates = self._eligible_candidates(env, x, ctx)
 
         if self.use_bandit:
-            bandit = self._bandits[(ctx.workload, bucket)]
+            bandit = self._bandit_for(ctx.workload, bucket, ctx.route)
             p = bandit.select(interval, candidates, ctx)
         else:
             p = min(candidates, key=lambda q: predicted_latency(q, ctx))
@@ -147,11 +171,31 @@ class ServiceAwareController:
                 observed_latency: float) -> None:
         if not self.use_bandit:
             return
-        bandit = self._bandits.get((ctx.workload, decision.bucket))
-        if bandit is not None:
-            # Residuals correct the prediction that was ACTED ON: the
-            # select-time Decision.predicted, not a recomputation from the
-            # observe-time context (whose bandwidth estimate may have
-            # drifted since the decision).
-            bandit.update(decision.interval, decision.profile, ctx,
-                          observed_latency, predicted=decision.predicted)
+        # Residuals correct the prediction that was ACTED ON: the
+        # select-time Decision.predicted, not a recomputation from the
+        # observe-time context (whose bandwidth estimate may have
+        # drifted since the decision).  The feedback lands on the SAME
+        # per-route bandit select() consulted (ctx carries the route).
+        bandit = self._bandit_for(ctx.workload, decision.bucket, ctx.route)
+        bandit.update(decision.interval, decision.profile, ctx,
+                      observed_latency, predicted=decision.predicted)
+
+    # ------------------------------------------------------------------
+    def predict(self, ctx: ServiceContext) -> float:
+        """Side-effect-free predicted latency of the profile the envelope
+        would choose for ``ctx`` — the routing layer's view of a route's
+        KV-movement cost.  Touches neither the bandit state nor its RNG
+        (``select`` advances both), so probing every candidate route per
+        request is safe."""
+        bucket = self._bucket_of(ctx.q_min)
+        env = self._envelopes.get((ctx.workload, bucket))
+        if env is None or not env.lines:
+            return baseline_latency(ctx)
+        x = 1.0 / max(ctx.bandwidth, 1e-9)
+        if not self.use_envelope:
+            # mirror select()'s ablation: the router must score the
+            # profile the controller will actually pick (max CR)
+            p = max((l.profile for l in env.lines), key=lambda q: q.cr)
+            return predicted_latency(p, ctx)
+        candidates = self._eligible_candidates(env, x, ctx)
+        return min(predicted_latency(p, ctx) for p in candidates)

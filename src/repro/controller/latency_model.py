@@ -31,6 +31,12 @@ class ServiceContext:
     # bandit's violation cooldown fires on the same metric the serving
     # layer reports as slo_violated.
     slo_metric: str = "jct"
+    # Placement route identity ("p0->d1") in a multi-worker cluster: the
+    # controller keeps a separate residual bandit per route, so the
+    # offline->online drift of EACH link is learned independently (a
+    # congested 50 Mbps cross-rack wire and an idle 1 Gbps local link get
+    # different residual corrections).  "" = single-link / routeless.
+    route: str = ""
 
 
 def predicted_latency(p: Profile, c: ServiceContext) -> float:

@@ -16,7 +16,13 @@ from repro.serving.network import (
     KVWire,
     WireTransfer,
 )
+from repro.serving.metrics import (
+    latency_summary,
+    percentile_row,
+    violation_rates,
+)
 from repro.serving.request import LIFECYCLE, Request, WorkloadMix, kv_bytes_for
+from repro.serving.topology import LinkSpec, NetworkTopology, route_name
 from repro.serving.scheduler import (
     AdmissionController,
     ContinuousScheduler,
@@ -33,9 +39,12 @@ from repro.serving.simulator import (
     StaticPolicy,
 )
 
-# NOTE: the real-execution runtime (ServingRuntime / DisaggregatedEngine)
-# lives in repro.serving.engine and is imported directly by its users — it
-# pulls in the jax model stack, which the simulator-only path doesn't need.
+# NOTE: the real-execution runtimes (ServingRuntime / ClusterRuntime /
+# DisaggregatedEngine and the worker classes) live in repro.serving.engine,
+# repro.serving.cluster and repro.serving.workers and are imported directly
+# by their users — they pull in the jax model stack, which the
+# simulator-only path doesn't need.  NetworkTopology is pure network model
+# and safe to export here (the simulator drives it too).
 
 __all__ = [
     "GBPS", "BandwidthTrace", "GoodputEstimator", "KVWire", "WireTransfer",
@@ -46,4 +55,6 @@ __all__ = [
     "KVTier", "TierHit", "TierSpec", "TieredKVStore", "default_tier_specs",
     "ContinuousScheduler", "SchedulerConfig", "AdmissionController",
     "priority_key",
+    "LinkSpec", "NetworkTopology", "route_name",
+    "latency_summary", "percentile_row", "violation_rates",
 ]

@@ -1,55 +1,42 @@
-"""Real-execution disaggregated serving runtime (CPU, tiny reference model).
+"""Real-execution disaggregated serving (CPU, tiny reference model).
 
-A faithful miniature of the paper's vLLM integration, in two granularities:
+Two granularities remain in this module; the heavy lifting moved into the
+worker/cluster layers (ISSUE 5):
 
 * :class:`DisaggregatedEngine` — the one-shot PD path: ``serve`` runs a
   single synchronous batch end-to-end (prefill -> compress -> wire ->
   decompress -> decode) and reports a :class:`ServedBatch` breakdown.  It
-  is a thin wrapper over the same stage helpers (:func:`compress_kvs`,
-  :func:`decompress_kvs`, :class:`~repro.serving.network.KVWire`) the
-  continuous runtime pipelines per request.
+  is a thin wrapper over the same stage helpers
+  (:func:`~repro.serving.workers.compress_kvs`,
+  :func:`~repro.serving.workers.decompress_kvs`,
+  :class:`~repro.serving.network.KVWire`) the continuous runtime
+  pipelines per request.
 
 * :class:`ServingRuntime` — the continuous-batching, multi-tenant runtime
-  (DESIGN.md §9): ``submit`` enqueues :class:`~repro.serving.request.Request`
-  objects through the shared :class:`~repro.serving.scheduler.ContinuousScheduler`
-  (admission control + SLO-class priorities), and each ``step()`` is one
-  iteration of TWO overlapped streams joined by a compressed-KV wire:
+  (DESIGN.md §9): since ISSUE 5 this is the **1x1 facade** over
+  :class:`~repro.serving.cluster.ClusterRuntime` — one
+  :class:`~repro.serving.workers.PrefillWorker`, one
+  :class:`~repro.serving.workers.DecodeWorker`, one
+  (p0 -> d0) link — preserving the original single-engine API
+  (``submit`` / ``step`` / ``run`` / ``summary``, ``.wire``, ``.store``,
+  ``.estimator``) byte-for-byte: the pinned PR-1 token fixture holds in
+  both ``pool`` and ``pd`` modes.  Scale-out (N x M workers, per-link
+  topology, load-aware routing) lives in ``repro.serving.cluster``
+  (DESIGN.md §10).
 
-  - the **prefill stream** admits up to ``max_prefills_per_step`` waiting
-    requests and runs each one's start-of-life stages;
-  - the **decode stream** advances every *previously running* slot one
-    token with a SINGLE jitted batched decode over the fixed-capacity
-    slot arena.
-
-  The streams run on separate workers, so an iteration costs
-  ``max(prefill stream, decode stream)`` and the difference is charged to
-  each request as ``stall`` — per-request breakdowns still sum exactly to
-  JCT.  Two serving scenarios share this loop (``RuntimeConfig.mode``):
+Both serving scenarios (``RuntimeConfig.mode``):
 
   - ``"pool"`` (KV-disaggregated prefix caching, the paper's TTFT path):
     the prefix pool is a :class:`~repro.serving.kvstore.TieredKVStore`
     memory hierarchy (HBM -> DRAM -> remote by default); hits fetch real
-    compressed bytes over the holding tier's serialized link (concurrent
-    fetches/writes contend) and promote on access, misses prefill locally
-    and write the compressed prefix back through the hierarchy *off* the
-    critical path (capacity pressure demotes entries down the tiers,
-    re-compressing with the destination tier's profile).
+    compressed bytes over the holding tier's serialized link and promote
+    on access, misses prefill locally and write the compressed prefix
+    back off the critical path.
   - ``"pd"`` (PD separation, the paper's JCT path): every cold request's
     prefix KV crosses the network — prefill -> controller-selected
     compress -> serialized :class:`~repro.serving.network.KVWire`
-    transfer -> decompress -> inject into the decode arena — all ON the
-    request's critical path, with concurrent transfers contending for
-    the wire.  The transferred bytes then seed the decode-side prefix
-    pool, so identical prompts hit without re-crossing the wire's cold
-    path.  Requests move through an explicit lifecycle
-    (waiting -> prefilling -> transferring -> decoding).
-
-The slot arena is ONE cache pytree with a leading slot axis of size
-``max_slots``.  Each slot owns a cache row, a per-slot position, and a
-live flag; the batched decode step masks free/fresh rows (parked at a
-scratch position) instead of branching per slot, so decode wall-clock is
-one model call per iteration regardless of occupancy — the continuous-
-batching amortization the per-slot loop of PR 1 lacked.
+    transfer -> decompress -> decode arena — ON the critical path, and
+    the transferred bytes seed the decode-side prefix pool.
 
 Every byte on the "wire" is real pipeline output.  Compute time is either
 measured wall-clock or (for deterministic benchmarks) modelled from
@@ -61,79 +48,40 @@ communication time always comes from the
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.controller import (
-    Decision,
-    ServiceAwareController,
-    ServiceContext,
-    TierFetch,
-)
-from repro.core.pipeline import CompressedKV, CompressionPipeline
+from repro.controller import ServiceAwareController, ServiceContext
 from repro.core.profiles import Profile
 from repro.core.quality import (
     _greedy_decode,
     _jitted_steps,
     _prompts_for,
-    copy_cache_slot,
     extract_kv,
     get_reference_model,
     inject_kv,
 )
-from repro.core.strategy import StrategyConfig, is_identity
+from repro.core.strategy import is_identity
 from repro.data.tokenizer import ByteTokenizer
-from repro.serving.kvstore import (
-    PrefixKVStore,
-    TierHit,
-    TierSpec,
-    TieredKVStore,
-    default_tier_specs,
-)
+from repro.serving.cluster import ClusterRuntime
 from repro.serving.network import BandwidthTrace, GoodputEstimator, KVWire
-from repro.serving.request import Request, kv_bytes_for
-from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
+from repro.serving.scheduler import SchedulerConfig
 
-
-def _select_profile(controller: Optional[ServiceAwareController],
-                    static_profile: Optional[Profile],
-                    ctx: ServiceContext
-                    ) -> Tuple[Profile, Optional[Decision]]:
-    """Shared controller / static / identity three-way profile choice."""
-    if controller is not None:
-        d = controller.select(ctx)
-        return d.profile, d
-    if static_profile is not None:
-        return static_profile, None
-    from repro.core.profiles import IDENTITY_PROFILE
-    return IDENTITY_PROFILE, None
-
-
-# ---------------------------------------------------------------------------
-# Shared PD stages (one-shot engine AND per-request continuous runtime)
-# ---------------------------------------------------------------------------
-def compress_kvs(strategy: StrategyConfig, kvs: Sequence[Any]
-                 ) -> Tuple[List[Any], int, float]:
-    """Compress each KV prefix for the wire.  Returns
-    ``(payloads, wire_bytes, measured_seconds)``."""
-    pipe = CompressionPipeline(strategy)
-    t0 = time.perf_counter()
-    comps = [pipe.compress(kv) for kv in kvs]
-    t_wall = time.perf_counter() - t0
-    return comps, sum(c.total_bytes() for c in comps), t_wall
-
-
-def decompress_kvs(comps: Sequence[CompressedKV]
-                   ) -> Tuple[List[Any], float]:
-    """Restore wire payloads to KV.  Returns ``(kvs, measured_seconds)``."""
-    t0 = time.perf_counter()
-    kvs = [CompressionPipeline(c.strategy).decompress(c) for c in comps]
-    t_wall = time.perf_counter() - t0
-    return kvs, t_wall
+# Re-exported for backward compatibility: these lived here before the
+# worker split (ISSUE 5); their home is now repro.serving.workers.
+from repro.serving.workers import (  # noqa: F401
+    RuntimeConfig,
+    ServedRequest,
+    Slot,
+    _select_profile,
+    compress_kvs,
+    decompress_kvs,
+    recompress_entry,
+)
 
 
 @dataclass
@@ -181,6 +129,11 @@ class DisaggregatedEngine:
               t_slo: float = 0.0, q_min: float = 0.97, seed: int = 0
               ) -> ServedBatch:
         tokens, _ = _prompts_for(workload, self.batch, self.seq, seed)
+        # Build the wire up front: attaching the (unseeded) estimator
+        # seeds its initial from the link's configured trace, so the
+        # controller decision below starts from THIS wire's bandwidth,
+        # not a universal 10 Gb/s guess.
+        wire = KVWire(trace, self.estimator)
 
         # ---- prefill worker ----
         t0 = time.perf_counter()
@@ -206,7 +159,6 @@ class DisaggregatedEngine:
 
         # ---- compress -> wire -> decompress (shared PD stages) ----
         comps, wire_bytes, t_compress = compress_kvs(profile.strategy, kvs)
-        wire = KVWire(trace, self.estimator)
         t_comm = wire.send(now + t_prefill + t_compress, wire_bytes).t_comm
         restored, t_decompress = decompress_kvs(comps)
 
@@ -237,111 +189,14 @@ class DisaggregatedEngine:
 
 
 # ===========================================================================
-# Continuous-batching runtime
+# Continuous-batching runtime: the 1x1 cluster facade
 # ===========================================================================
-@dataclass
-class RuntimeConfig:
-    seq: int = 96                 # prompt tokens (padded/truncated)
-    decode_tokens: int = 12       # generation budget per request
-    # Serving scenario: "pool" = KV-disaggregated prefix caching (cold
-    # requests prefill locally, pool writes are off the critical path);
-    # "pd" = PD separation (every cold request's compressed KV crosses the
-    # serialized wire prefill -> compress -> transfer -> decompress ->
-    # decode, ON the critical path).
-    mode: str = "pool"
-    # Virtual-clock cost model.  None = measure wall-clock (real execution
-    # time of the tiny model); a float models a loaded cluster, which is the
-    # paper's pool regime where prefill is the expensive path.  When set,
-    # codec stages are modelled from the profile's measured throughputs
-    # (V/s_enc, V/s_dec — Eq. 1) so sweeps are deterministic.
-    prefill_tok_s: Optional[float] = None
-    decode_tok_s: Optional[float] = None
-    pool_fetch_overhead: float = 0.002   # pool RPC setup cost (s)
-    store_capacity: int = 64 << 20       # wire bytes (remote/pool tier)
-    store_block: int = 16
-    # KV memory hierarchy (ISSUE 4).  None builds the default: pool mode
-    # gets HBM -> DRAM -> remote (hot/dram capacities below, remote =
-    # store_capacity over the runtime's BandwidthTrace); PD mode gets a
-    # single remote tier sharing the PD transfer wire (the pool lives
-    # across the same link the compressed KV crosses).  Pass an explicit
-    # TierSpec list to override either.
-    tiers: Optional[Sequence[TierSpec]] = None
-    hot_tier_bytes: int = 4 << 20
-    dram_tier_bytes: int = 16 << 20
-    # PD cold path: what the decode arena is materialized from.  False
-    # (default) keeps the prefill worker's exact cache — cold decode is
-    # numerically identical to the pool scenario (token-exact vs the
-    # pinned PR-1 fixture); the compressed payload still crosses the wire
-    # byte-for-byte and is what later pool hits decode from, so the
-    # profile's quality loss surfaces exactly where the pool path's does.
-    # True injects the wire-restored KV instead (quality-faithful decode;
-    # tokens then reflect the selected profile's loss immediately).
-    pd_inject_restored: bool = False
-
-
-@dataclass
-class ServedRequest:
-    """Per-request outcome of the continuous runtime (the per-request
-    analogue of :class:`ServedBatch`)."""
-
-    rid: int
-    workload: str
-    slo_class: str
-    text: str
-    tokens: np.ndarray
-    profile: str
-    pool_hit: bool
-    kv_bytes: int
-    wire_bytes: int               # bytes this request moved over the wire
-    arrival: float
-    done: float
-    ttft: float
-    slot: int = -1                # arena slot that served the request
-    # Critical-path decomposition; sums exactly to jct.  Keys: queue,
-    # prefill | comm+decompress (pool hit), decode, stall (time spent
-    # waiting on the iteration's other stream), and — PD mode — compress,
-    # wire_wait (queueing behind other transfers on the serialized wire),
-    # comm, decompress, all on the request's critical path.
-    breakdown: Dict[str, float] = field(default_factory=dict)
-    # Off-critical-path cost of writing the compressed prefix to the pool
-    # (compress + wire), charged to the background writer, not the request.
-    # Always 0.0 in PD mode: there the transfer IS the critical path, and
-    # the transferred bytes seed the decode-side pool for free.
-    t_pool_write: float = 0.0
-    # Which latency the SLO bounded ("ttft" | "jct") and whether it was
-    # violated — the bandit observed the SAME metric.
-    slo_metric: str = "jct"
-    slo_violated: bool = False
-
-    @property
-    def jct(self) -> float:
-        return self.done - self.arrival
-
-
-@dataclass
-class _Slot:
-    """Host-side bookkeeping for one occupied arena slot (the device-side
-    state — cache row, position, live flag — lives in the arena arrays)."""
-
-    req: Request
-    idx: int                      # arena slot index (row in the cache pytree)
-    toks: List[int]               # generated tokens (incl. first)
-    pool_hit: bool
-    profile: str
-    wire_bytes: int
-    breakdown: Dict[str, float]
-    ttft: float
-    pool_write: float = 0.0       # off-path compress+write cost (misses)
-    # Controller feedback deferred to _finish so the bandit observes the
-    # request's realized critical-path latency (= breakdown sum = jct),
-    # not the off-critical-path pool write.
-    ctx: Optional[ServiceContext] = None
-    decision: Optional[Decision] = None
-
-
-class ServingRuntime:
+class ServingRuntime(ClusterRuntime):
     """Iteration-level (continuous-batching) serving of the tiny reference
-    model against a compressed prefix-KV pool, on a batched slot arena."""
+    model — the single-engine deployment: a :class:`ClusterRuntime` of
+    exactly one prefill worker, one decode arena, and one (p0 -> d0)
+    link, with the original single-engine attribute surface
+    (``.wire``, ``.store``, ``.estimator``, ``.n_slots``)."""
 
     def __init__(self, controller: Optional[ServiceAwareController] = None,
                  static_profile: Optional[Profile] = None,
@@ -349,548 +204,7 @@ class ServingRuntime:
                  scheduler: Optional[SchedulerConfig] = None,
                  store: Optional[Any] = None,
                  trace: Optional[BandwidthTrace] = None):
-        self.cfg = config or RuntimeConfig()
-        self.controller = controller
-        self.static_profile = static_profile
-        self.scheduler = ContinuousScheduler(scheduler or SchedulerConfig())
-        self.trace = trace or BandwidthTrace.constant(1e9)
-        self.estimator = GoodputEstimator(initial=self.trace.at(0.0))
-        # The PD transfer link: one serialized queue, so transfers of
-        # concurrently admitted requests contend.
-        self.wire = KVWire(self.trace, self.estimator)
-        # The prefix pool is a tiered memory hierarchy; every fetch and
-        # write is routed through the holding tier's serialized link, so
-        # concurrent pool traffic contends (a flat PrefixKVStore passed in
-        # is adopted as a single remote tier over the runtime's trace).
-        if store is None:
-            specs = self.cfg.tiers
-            if specs is None:
-                if self.cfg.mode == "pd":
-                    specs = [TierSpec(
-                        "remote", self.cfg.store_capacity,
-                        bandwidth=self.trace,
-                        fetch_overhead=self.cfg.pool_fetch_overhead,
-                        observe_goodput=True)]
-                else:
-                    specs = default_tier_specs(
-                        self.cfg.store_capacity, self.trace,
-                        remote_overhead=self.cfg.pool_fetch_overhead,
-                        hot_bytes=self.cfg.hot_tier_bytes,
-                        dram_bytes=self.cfg.dram_tier_bytes)
-            self.store = TieredKVStore(specs, block=self.cfg.store_block,
-                                       estimator=self.estimator,
-                                       recompress=self._recompress_entry)
-            if self.cfg.mode == "pd":
-                # PD transfers and pool fetches/writes share ONE physical
-                # link — the pool sits across the same wire the compressed
-                # KV crosses.
-                self.store.tiers[-1].wire = self.wire
-        elif isinstance(store, TieredKVStore):
-            self.store = store
-            if store.estimator is None:
-                store.estimator = self.estimator
-            if store.recompress is None:
-                store.recompress = self._recompress_entry
-        else:
-            self.store = TieredKVStore.wrap_flat(
-                store, self.trace,
-                fetch_overhead=self.cfg.pool_fetch_overhead,
-                estimator=self.estimator)
-            self.store.recompress = self._recompress_entry
-        self.model_cfg, self.params = get_reference_model()
-        self.max_len = self.cfg.seq + self.cfg.decode_tokens + 2
-        self._pre1, _, _ = _jitted_steps(
-            self.model_cfg.name, self.cfg.seq, 1, self.max_len)
-        self.n_slots = self.scheduler.cfg.max_slots
-        _, _, self._dec_arena = _jitted_steps(
-            self.model_cfg.name, self.cfg.seq, self.n_slots, self.max_len)
-        self.tok = ByteTokenizer()
-        self.clock = 0.0
-        self.steps = 0
-        self.completed: List[ServedRequest] = []
-        self.step_log: List[Dict[str, float]] = []
-        self._slots: Dict[int, _Slot] = {}
-        self._prompts: Dict[int, np.ndarray] = {}
-        self._next_rid = 0
-        # ---- device-side slot arena (lazily materialised) ----
-        self._arena: Any = None          # cache pytree, leading axis n_slots
-        self._positions = np.zeros(self.n_slots, np.int32)  # next write pos
-        self._last_tok = np.zeros(self.n_slots, np.int32)   # last emitted tok
-
-    # ------------------------------------------------------------------
-    def _ensure_arena(self):
-        if self._arena is None:
-            from repro.models.transformer import init_cache, plan_stack
-            plan = plan_stack(self.model_cfg)
-            if any(s.kind != "attn"
-                   for s in plan.prefix_specs + plan.period_specs):
-                raise NotImplementedError(
-                    "slot arena masking assumes attention-only caches "
-                    "(SSM states advance unmasked)")
-            self._arena = init_cache(self.model_cfg, self.n_slots,
-                                     self.max_len)
-        return self._arena
-
-    # ------------------------------------------------------------------
-    @property
-    def slo_metric_default(self) -> str:
-        """Scenario default for requests that don't pin one: the pool
-        scenario's SLO is time-to-first-token, PD separation's is JCT."""
-        return "jct" if self.cfg.mode == "pd" else "ttft"
-
-    def submit(self, workload: str, t_slo: float = 0.0, q_min: float = 0.97,
-               slo_class: str = "standard", out_tokens: Optional[int] = None,
-               prompt_seed: int = 0,
-               slo_metric: Optional[str] = None) -> Optional[int]:
-        """Admit one request at the current virtual time.  Two submissions
-        with the same (workload, prompt_seed) share a prompt, so the second
-        can be served from the prefix pool.  Returns the request id, or
-        None if admission control shed it."""
-        if slo_metric not in (None, "ttft", "jct"):
-            raise ValueError(f"slo_metric must be 'ttft' or 'jct', "
-                             f"got {slo_metric!r}")
-        rid = self._next_rid
-        self._next_rid += 1
-        tokens, _ = _prompts_for(workload, 1, self.cfg.seq, prompt_seed)
-        tokens = np.asarray(tokens)[0]
-        m = self.model_cfg
-        req = Request(
-            rid=rid, workload=workload, arrival=self.clock,
-            ctx_tokens=self.cfg.seq,
-            out_tokens=(self.cfg.decode_tokens if out_tokens is None
-                        else min(out_tokens, self.cfg.decode_tokens)),
-            kv_bytes=kv_bytes_for(self.cfg.seq, m.num_layers, m.kv_heads,
-                                  m.resolved_head_dim),
-            t_slo=t_slo, q_min=q_min, slo_class=slo_class,
-            slo_metric=slo_metric,
-            prefix_key=tuple(int(t) for t in tokens))
-        if not self.scheduler.submit(req, self.clock):
-            return None
-        self._prompts[rid] = tokens
-        return rid
-
-    # ------------------------------------------------------------------
-    # Start-of-life stages, shared by the pool and PD paths
-    # ------------------------------------------------------------------
-    def _codec_cost(self, measured: float, nbytes: float,
-                    speed: float) -> float:
-        """Codec stage cost: measured wall-clock, or — under the virtual
-        clock — modelled from the profile's throughput (V/s, Eq. 1)."""
-        if self.cfg.prefill_tok_s is None:
-            return measured
-        return 0.0 if speed == float("inf") else nbytes / speed
-
-    def _run_prefill(self, req: Request, tokens: np.ndarray):
-        """Real batch-1 prefill on the prefill worker.  Returns
-        ``(caches, first_token, t_prefill)``."""
-        t0 = time.perf_counter()
-        logits, caches = self._pre1(self.params, {"tokens": tokens[None, :]})
-        jax.block_until_ready(logits)
-        t_wall = time.perf_counter() - t0
-        t_prefill = (req.ctx_tokens / self.cfg.prefill_tok_s
-                     if self.cfg.prefill_tok_s else t_wall)
-        first = int(np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))[0])
-        return caches, first, t_prefill
-
-    def _select_and_compress(self, req: Request, caches, t_prefill: float):
-        """Controller decision + real compression of the prefix KV.
-        Returns ``(comp, ctx, decision, profile, t_compress)``."""
-        kv = extract_kv(self.model_cfg, caches, 0, upto=self.cfg.seq)
-        ctx = ServiceContext(
-            workload=req.workload, bandwidth=self.estimator.estimate,
-            t_slo=req.t_slo, q_min=req.q_min, t_model=t_prefill,
-            kv_bytes=kv.nbytes_wire(),
-            slo_metric=req.resolved_slo_metric(self.slo_metric_default))
-        profile, decision = _select_profile(self.controller,
-                                            self.static_profile, ctx)
-        comps, _, t_wall = compress_kvs(profile.strategy, [kv])
-        t_compress = self._codec_cost(t_wall, kv.nbytes_wire(),
-                                      profile.s_enc)
-        return comps[0], ctx, decision, profile, t_compress
-
-    def _fetch_entry(self, entry, idx: int):
-        """Decompress a stored pool entry and inject it into arena slot
-        ``idx``.  Returns ``(first_token, t_decompress)``.  Cache injection
-        is host-side bookkeeping of the miniature (the cold path's
-        equivalent writes happen inside prefill), so it is not billed to
-        the virtual clock."""
-        comp, first, s_dec = entry.payload
-        restored, t_wall = decompress_kvs([comp])
-        t_decompress = self._codec_cost(t_wall, entry.kv_bytes, s_dec)
-        self._arena = inject_kv(self.model_cfg, self._ensure_arena(), idx,
-                                restored[0])
-        return int(first), t_decompress
-
-    # ------------------------------------------------------------------
-    def _recompress_entry(self, entry, profile: Profile
-                          ) -> Optional[Tuple[Any, int]]:
-        """Tier demotion / refetch-smaller hook: really re-encode a stored
-        ``(CompressedKV, first, s_dec)`` payload with ``profile``.  Returns
-        None when it would not shrink."""
-        comp, first, _ = entry.payload
-        if comp.strategy == profile.strategy:
-            return None
-        restored, _ = decompress_kvs([comp])
-        comps, wire, _ = compress_kvs(profile.strategy, restored)
-        if wire >= entry.wire_bytes:
-            return None
-        return (comps[0], first, profile.s_dec), wire
-
-    def _maybe_refetch_smaller(self, req: Request, hit: TierHit,
-                               now: float) -> float:
-        """Tier-aware fetch routing: ask the controller to trade fetching
-        the stored encoding over the holding tier's link against
-        re-encoding it with the pool tier's (most aggressive) demotion
-        profile before the transfer — the "refetch smaller" route that
-        pays encode time to cross a slow link with fewer bytes.  Returns
-        the source-side re-encode time spent ON the request's critical
-        path (0.0 when the stored route wins)."""
-        select_fetch = getattr(self.controller, "select_fetch", None)
-        if select_fetch is None:
-            return 0.0
-        tier, e = hit.tier, hit.entry
-        small = self.store.tiers[-1].spec.profile
-        if small is None or small.q(req.workload) < req.q_min:
-            return 0.0
-        bandwidth = (self.estimator.estimate if tier.spec.observe_goodput
-                     else tier.trace.at(now))
-        common = dict(tier=tier.name, kv_bytes=e.kv_bytes,
-                      bandwidth=bandwidth, overhead=tier.fetch_overhead)
-        stored = TierFetch(variant="stored", wire_bytes=e.wire_bytes,
-                           s_dec=e.payload[2], **common)
-        small_bytes = e.kv_bytes / max(small.cr, 1.0)
-        if small_bytes >= e.wire_bytes:
-            return 0.0
-        reenc = TierFetch(variant="reencoded", wire_bytes=small_bytes,
-                          s_enc=small.s_enc, s_dec=small.s_dec, **common)
-        ctx = ServiceContext(
-            workload=req.workload, bandwidth=bandwidth, t_slo=req.t_slo,
-            q_min=req.q_min, kv_bytes=e.kv_bytes,
-            slo_metric=req.resolved_slo_metric(self.slo_metric_default))
-        decision = select_fetch(ctx, [stored, reenc])
-        if decision is None or decision.option.variant != "reencoded":
-            return 0.0
-        t0 = time.perf_counter()
-        if not self.store.reencode(hit, small):
-            return 0.0
-        # The re-encode happens before the bytes can cross the link: its
-        # cost (the enc term of the fetch decision) is on the critical
-        # path — measured wall-clock, or V/s_enc under the virtual clock.
-        return self._codec_cost(time.perf_counter() - t0, e.kv_bytes,
-                                small.s_enc)
-
-    # ------------------------------------------------------------------
-    def _start_request(self, req: Request, now: float,
-                       busy: float) -> Tuple[float, float]:
-        """Pool-mode start: prefill-or-fetch one admitted request into its
-        arena slot (``req.slot``, assigned by the scheduler).  A hit never
-        touches the prefill worker — its fetch starts at ``now`` and
-        contends on the holding tier's serialized link; a miss serializes
-        on the prefill worker (``busy``) and writes the compressed prefix
-        back through the hot tier's link off the critical path.  Returns
-        ``(end_offset, new_busy)`` relative to ``now``."""
-        tokens = self._prompts[req.rid]
-        key = req.prefix_key
-        idx = req.slot
-        arena = self._ensure_arena()
-        # full=True: a partial (block-aligned) prefix hit would leave the
-        # uncovered prompt suffix without KV — the runtime has no top-up
-        # prefill, so only a full-coverage entry counts as a pool hit.
-        hit = self.store.lookup(key, now=now, full=True)
-        bd: Dict[str, float] = {"queue": now - req.arrival}
-
-        if hit is not None:
-            # ---- pool hit: fetch real compressed bytes over the holding
-            # tier's serialized link, decompress, inject into the slot
-            entry = hit.entry
-            req.state = "transferring"
-            t_reencode = self._maybe_refetch_smaller(req, hit, now)
-            tr = self.store.fetch(hit, ready=now + t_reencode)
-            first, t_decompress = self._fetch_entry(entry, idx)
-            cost = (t_reencode + hit.tier.fetch_overhead + tr.t_wait
-                    + tr.t_comm + t_decompress)
-            bd.update(wire_wait=tr.t_wait,
-                      comm=hit.tier.fetch_overhead + tr.t_comm,
-                      decompress=t_decompress)
-            if t_reencode > 0:
-                bd["compress"] = t_reencode
-            req.state = "decoding"
-            slot = _Slot(req=req, idx=idx, toks=[first],
-                         pool_hit=True,
-                         profile=entry.payload[0].strategy.short_name(),
-                         wire_bytes=int(entry.wire_bytes), breakdown=bd,
-                         ttft=(now + cost) - req.arrival)
-            self._occupy(slot, first)
-            return cost, busy
-
-        # ---- miss: real prefill into the slot (serialized on the prefill
-        # worker), then write the compressed prefix back to the hierarchy
-        bd["queue"] += busy
-        caches, first, t_prefill = self._run_prefill(req, tokens)
-        bd.update(prefill=t_prefill)
-        self._arena = copy_cache_slot(self.model_cfg, arena, caches, idx)
-
-        comp, ctx, decision, profile, t_compress = \
-            self._select_and_compress(req, caches, t_prefill)
-        wire = comp.total_bytes()
-        # The pool write crosses the hot tier's link off the request's
-        # critical path (it still contends with fetches there); its cost
-        # is booked to pool_write, and the controller observes the
-        # request's critical-path latency at _finish instead.
-        wr = self.store.write(
-            key, (comp, first, profile.s_dec), wire, kv_bytes=ctx.kv_bytes,
-            workload=req.workload, slo_class=req.slo_class,
-            ready=now + busy + t_prefill + t_compress, tier=0)
-        req.state = "decoding"
-        end = busy + t_prefill
-        slot = _Slot(req=req, idx=idx, toks=[first], pool_hit=False,
-                     profile=profile.strategy.short_name(),
-                     wire_bytes=int(wire), breakdown=bd,
-                     ttft=(now + end) - req.arrival,
-                     pool_write=t_compress + wr.t_wait + wr.t_comm,
-                     ctx=ctx, decision=decision)
-        self._occupy(slot, first)
-        return end, end
-
-    # ------------------------------------------------------------------
-    def _start_request_pd(self, req: Request, now: float,
-                          busy: float) -> Tuple[float, float]:
-        """PD-mode start: run one admitted request through its critical
-        path — prefill (on the prefill worker, serialized at ``busy``) ->
-        controller-selected compress -> serialized wire transfer ->
-        decompress -> inject into the decode arena.  A decode-side pool
-        hit skips the whole cold path (the prefix's bytes crossed the wire
-        earlier).  Returns ``(end_offset, new_busy)`` relative to ``now``.
-        """
-        tokens = self._prompts[req.rid]
-        key = req.prefix_key
-        idx = req.slot
-        bd: Dict[str, float] = {"queue": now - req.arrival}
-
-        hit = self.store.lookup(key, now=now, full=True)
-        if hit is not None:
-            # ---- decode-side prefix hit: the compressed prefix already
-            # crossed the wire for an earlier request; fetch it from the
-            # pool tier (contending for the same wire) instead of
-            # re-prefilling.
-            entry = hit.entry
-            req.state = "transferring"
-            tr = self.store.fetch(hit, ready=now)
-            first, t_decompress = self._fetch_entry(entry, idx)
-            end = (hit.tier.fetch_overhead + tr.t_wait + tr.t_comm
-                   + t_decompress)
-            bd.update(wire_wait=tr.t_wait,
-                      comm=hit.tier.fetch_overhead + tr.t_comm,
-                      decompress=t_decompress)
-            req.state = "decoding"
-            slot = _Slot(req=req, idx=idx, toks=[first], pool_hit=True,
-                         profile=entry.payload[0].strategy.short_name(),
-                         wire_bytes=int(entry.wire_bytes), breakdown=bd,
-                         ttft=(now + end) - req.arrival)
-            self._occupy(slot, first)
-            return end, busy
-
-        # ---- cold request: the full PD critical path.  The prefill
-        # worker is serialized within the iteration (``busy``); the wire
-        # is serialized across ALL transfers (self.wire).
-        bd["queue"] += busy
-        caches, first, t_prefill = self._run_prefill(req, tokens)
-        comp, ctx, decision, profile, t_compress = \
-            self._select_and_compress(req, caches, t_prefill)
-        busy = busy + t_prefill + t_compress
-        wire_bytes = comp.total_bytes()
-        req.state = "transferring"
-        tr = self.wire.send(now + busy, wire_bytes)
-        # The arena row comes from the restored bytes or (default) from
-        # the prefill cache — see RuntimeConfig.pd_inject_restored.  The
-        # real decompress only runs when its output or its measured time
-        # is actually consumed (virtual-clock default models the cost from
-        # profile.s_dec, so running it would be pure benchmark tax).
-        if self.cfg.pd_inject_restored or self.cfg.prefill_tok_s is None:
-            restored, t_wall = decompress_kvs([comp])
-        else:
-            restored, t_wall = None, 0.0
-        t_decompress = self._codec_cost(t_wall, ctx.kv_bytes, profile.s_dec)
-        if self.cfg.pd_inject_restored:
-            self._arena = inject_kv(self.model_cfg, self._ensure_arena(),
-                                    idx, restored[0])
-        else:
-            self._arena = copy_cache_slot(self.model_cfg,
-                                          self._ensure_arena(), caches, idx)
-        # The bytes that just crossed the wire seed the decode-side pool
-        # tier (no extra transfer): later identical prompts hit it.
-        self.store.put(key, (comp, first, profile.s_dec), wire_bytes,
-                       kv_bytes=ctx.kv_bytes, workload=req.workload,
-                       slo_class=req.slo_class, now=tr.end,
-                       tier=len(self.store.tiers) - 1)
-        end = busy + tr.t_wait + tr.t_comm + t_decompress
-        bd.update(prefill=t_prefill, compress=t_compress,
-                  wire_wait=tr.t_wait, comm=tr.t_comm,
-                  decompress=t_decompress)
-        req.state = "decoding"
-        slot = _Slot(req=req, idx=idx, toks=[first], pool_hit=False,
-                     profile=profile.strategy.short_name(),
-                     wire_bytes=int(wire_bytes), breakdown=bd,
-                     ttft=(now + end) - req.arrival,
-                     ctx=ctx, decision=decision)
-        self._occupy(slot, first)
-        return end, busy
-
-    # ------------------------------------------------------------------
-    def _occupy(self, slot: _Slot, first: int) -> None:
-        self._slots[slot.req.rid] = slot
-        self._positions[slot.idx] = self.cfg.seq
-        self._last_tok[slot.idx] = first
-
-    # ------------------------------------------------------------------
-    def _finish(self, slot: _Slot, now: float) -> None:
-        req = slot.req
-        toks = np.asarray(slot.toks, dtype=np.int32)
-        req.ttft = slot.ttft
-        req.done = now
-        req.chosen = slot.profile
-        req.breakdown = slot.breakdown
-        # One SLO metric end to end: the same latency (ttft or jct,
-        # request-pinned or scenario default) is compared to t_slo here
-        # AND fed to the bandit, so its violation cooldown fires on the
-        # metric the runtime reports — not a different one.
-        metric = req.resolved_slo_metric(self.slo_metric_default)
-        observed = (slot.ttft if metric == "ttft"
-                    else sum(slot.breakdown.values()))
-        req.slo_violated = req.t_slo > 0 and observed > req.t_slo
-        if self.controller is not None and slot.decision is not None:
-            # Residual-bandit feedback: the realized critical-path latency
-            # of the SLO metric (jct == the ServedRequest breakdown sum).
-            self.controller.observe(slot.ctx, slot.decision, observed)
-        self.completed.append(ServedRequest(
-            rid=req.rid, workload=req.workload, slo_class=req.slo_class,
-            text=self.tok.decode(toks), tokens=toks, profile=slot.profile,
-            pool_hit=slot.pool_hit, kv_bytes=int(req.kv_bytes),
-            wire_bytes=slot.wire_bytes, arrival=req.arrival, done=now,
-            ttft=slot.ttft, slot=slot.idx, breakdown=slot.breakdown,
-            t_pool_write=slot.pool_write, slo_metric=metric,
-            slo_violated=req.slo_violated))
-        self.scheduler.finish(req.rid)   # releases the arena slot id
-        del self._slots[req.rid]
-        self._prompts.pop(req.rid, None)
-
-    # ------------------------------------------------------------------
-    def _prefill_stream(self, now: float) -> List[Tuple[_Slot, float]]:
-        """The iteration's prefill stream: admit up to
-        ``max_prefills_per_step`` waiting requests and run each through
-        its start-of-life stages.  Returns ``(slot, end_offset)`` pairs;
-        the stream's cost is the max end offset.  In both modes only the
-        prefill worker serializes (``busy``): pool hits are pure fetches
-        that start at ``now`` and contend on their tier's serialized link,
-        misses/cold requests queue for the prefill worker, and in PD mode
-        a request's transfer overlaps the next request's prefill."""
-        started: List[Tuple[_Slot, float]] = []
-        busy = 0.0                # prefill-worker occupancy offset
-        for req in self.scheduler.next_prefills(now):
-            if self.cfg.mode == "pd":
-                end, busy = self._start_request_pd(req, now, busy)
-            else:
-                end, busy = self._start_request(req, now, busy)
-            started.append((self._slots[req.rid], end))
-        return started
-
-    def step(self) -> Dict[str, float]:
-        """One iteration of the two overlapped streams: the prefill stream
-        admits prefill/fetch/transfer work, the decode stream advances
-        every *previously running* decode slot by one token (a request's
-        first decode token comes the iteration after its prefill) — all
-        slots in ONE masked batched decode call.  The iteration costs
-        ``max(streams)``; the difference is charged as stall."""
-        now = self.clock
-        started = self._prefill_stream(now)
-        prefill_cost = max((end for _, end in started), default=0.0)
-        new_rids = {s.req.rid for s, _ in started}
-
-        # Iteration-level decode: every in-flight slot emits one token via
-        # a single jitted arena step (per-slot positions, on-device argmax,
-        # one (B,) token pull per iteration — no per-slot host round-trips).
-        decode_wall = 0.0
-        active = [s for rid, s in self._slots.items() if rid not in new_rids]
-        if active:
-            mask = np.zeros(self.n_slots, bool)
-            for slot in active:
-                mask[slot.idx] = True
-            t0 = time.perf_counter()
-            nxt, self._arena = self._dec_arena(
-                self.params, self._ensure_arena(),
-                jnp.asarray(self._last_tok[:, None]),
-                jnp.asarray(self._positions), jnp.asarray(mask))
-            nxt = np.asarray(nxt)        # the step's single host sync
-            decode_wall = time.perf_counter() - t0
-            for slot in active:
-                t = int(nxt[slot.idx])
-                slot.toks.append(t)
-                self._last_tok[slot.idx] = t
-                self._positions[slot.idx] += 1
-        decode_cost = 0.0
-        if active:
-            decode_cost = (1.0 / self.cfg.decode_tok_s
-                           if self.cfg.decode_tok_s else decode_wall)
-
-        # An iteration costs the slower of the prefill and decode streams
-        # (PD-separated workers run them concurrently); the difference is
-        # charged to each slot as "stall" so breakdowns sum exactly to jct.
-        iter_cost = max(prefill_cost, decode_cost)
-        for slot in active:
-            slot.breakdown["decode"] = \
-                slot.breakdown.get("decode", 0.0) + decode_cost
-            slot.breakdown["stall"] = \
-                slot.breakdown.get("stall", 0.0) + iter_cost - decode_cost
-        for slot, end_offset in started:
-            slot.breakdown["stall"] = \
-                slot.breakdown.get("stall", 0.0) + iter_cost - end_offset
-        self.clock = now + iter_cost
-        self.steps += 1
-        for slot in list(self._slots.values()):
-            if len(slot.toks) > slot.req.out_tokens:
-                self._finish(slot, self.clock)
-
-        stats = {"step": float(self.steps), "clock": self.clock,
-                 "in_flight": float(len(active) + len(started)),
-                 "queue_depth": float(self.scheduler.queue_depth),
-                 "completed": float(len(self.completed)),
-                 "store_used": float(self.store.used_bytes)}
-        self.step_log.append(stats)
-        return stats
-
-    # ------------------------------------------------------------------
-    def run(self, max_steps: int = 10_000) -> List[ServedRequest]:
-        """Step until every admitted request completed, or until
-        ``max_steps`` iterations *from this call* — the budget is relative,
-        so a second ``run()`` on a long-lived runtime keeps making
-        progress instead of returning against the cumulative counter."""
-        start = self.steps
-        while not self.scheduler.idle and self.steps - start < max_steps:
-            self.step()
-        return self.completed
-
-    # ------------------------------------------------------------------
-    def max_in_flight(self) -> int:
-        return int(max((s["in_flight"] for s in self.step_log), default=0))
-
-    def summary(self) -> Dict[str, float]:
-        hits = [r for r in self.completed if r.pool_hit]
-        cold = [r for r in self.completed if not r.pool_hit]
-        out = {
-            "completed": len(self.completed),
-            "rejected": self.scheduler.admission.rejected,
-            "max_in_flight": self.max_in_flight(),
-            "pool_hits": len(hits),
-            "pool_hit_rate": len(hits) / max(len(self.completed), 1),
-            "wire_transfers": float(self.wire.transfers),
-            "wire_bytes_moved": float(self.wire.bytes_moved),
-        }
-        if self.completed:
-            out["mean_jct"] = float(np.mean([r.jct for r in self.completed]))
-            out["mean_ttft"] = float(np.mean([r.ttft for r in self.completed]))
-        if hits:
-            out["mean_ttft_hit"] = float(np.mean([r.ttft for r in hits]))
-        if cold:
-            out["mean_ttft_cold"] = float(np.mean([r.ttft for r in cold]))
-        out.update({f"store_{k}": v for k, v in self.store.summary().items()})
-        return out
+        super().__init__(controller=controller,
+                         static_profile=static_profile,
+                         config=config, scheduler=scheduler, store=store,
+                         trace=trace, n_prefill=1, n_decode=1)

@@ -278,11 +278,18 @@ class TierSpec:
 
 
 class KVTier:
-    """A built tier: its bounded store + its serialized fetch link."""
+    """A built tier: its bounded store + its serialized fetch link.
+
+    ``shared=True`` marks a tier that several TieredKVStores end in (the
+    cluster-wide disaggregated pool): promotion out of a shared tier
+    COPIES the entry into the fetching hierarchy's hot tier instead of
+    moving it — the pool copy must stay visible to every other worker.
+    """
 
     def __init__(self, spec: TierSpec, block: int):
         self.spec = spec
         self.name = spec.name
+        self.shared = False
         self.trace = (spec.bandwidth
                       if isinstance(spec.bandwidth, BandwidthTrace)
                       else BandwidthTrace.constant(float(spec.bandwidth)))
@@ -349,14 +356,23 @@ class TieredKVStore:
     entry stays invisible until its transfer lands (``created`` rule).
     """
 
-    def __init__(self, specs: Sequence[TierSpec], block: int = 16,
+    def __init__(self, specs: Sequence[Any], block: int = 16,
                  estimator: Optional[Any] = None,
                  recompress: Optional[
                      Callable[[StoreEntry, Any],
                               Optional[Tuple[Any, int]]]] = None):
         assert specs, "at least one tier required"
         self.block = int(block)
-        self.tiers: List[KVTier] = [KVTier(s, self.block) for s in specs]
+        # A spec list may mix TierSpec (a private tier is built) with
+        # pre-built KVTier objects (adopted as-is).  Sharing one KVTier
+        # across several TieredKVStores is how a cluster models worker-
+        # LOCAL hot tiers over a SHARED disaggregated remote pool: each
+        # decode worker's hierarchy ends in the same pool tier, so its
+        # capacity, entries and serialized link are cluster-global while
+        # HBM/DRAM stay per-worker.
+        self.tiers: List[KVTier] = [
+            s if isinstance(s, KVTier) else KVTier(s, self.block)
+            for s in specs]
         self.estimator = estimator
         self.recompress = recompress
         self.stats = TieredStats()
@@ -398,6 +414,18 @@ class TieredKVStore:
 
     def contains(self, tokens: TokenKey, now: float = 0.0) -> bool:
         return any(t.store.contains(tokens, now=now) for t in self.tiers)
+
+    def peek(self, tokens: TokenKey, now: float = 0.0) -> Optional[TierHit]:
+        """Stats- and recency-NEUTRAL exact-key probe (the routing
+        layer's view): which tier holds the prefix, and at how many wire
+        bytes — without counting a hit, bumping recency, or promoting.
+        Same write-visibility rule as :meth:`lookup`."""
+        tokens = tuple(tokens)
+        for i, tier in enumerate(self.tiers):
+            e = tier.store._entries.get(tokens)
+            if e is not None and e.created <= now:
+                return TierHit(entry=e, tier_index=i, tier=tier)
+        return None
 
     # ------------------------------------------------------------------
     def _maybe_recompress(self, entry: StoreEntry, tier: KVTier) -> None:
@@ -456,11 +484,17 @@ class TieredKVStore:
         use :meth:`write` to also occupy the tier's wire).  Stale copies of
         the key anywhere in the hierarchy are dropped first — but a
         refresh whose placement is rejected everywhere restores the old
-        copy (same rollback rule as the flat store).  Returns the tier
+        copy (same rollback rule as the flat store).  A cluster-SHARED
+        tier is never pre-clobbered: other workers' hierarchies end in
+        it, so one worker's local refresh must not remove a copy the
+        whole cluster relies on (a placement that cascades INTO the
+        shared tier still same-key-replaces there).  Returns the tier
         index the entry landed at, or None if rejected."""
         tokens = tuple(tokens)
         old: Optional[Tuple[KVTier, StoreEntry]] = None
         for t in self.tiers:
+            if t.shared:
+                continue
             e = t.store.discard(tokens)
             if e is not None:
                 old = (t, e)
@@ -521,18 +555,32 @@ class TieredKVStore:
         tier0 = self.tiers[0]
         if hit.entry.wire_bytes > tier0.store.capacity_bytes:
             return  # can never fit the hot tier: stay put
-        e = hit.tier.store.discard(hit.entry.tokens)
-        if e is None:
-            return
-        # Promotion must never make an entry LESS visible: it has been
-        # servable since its original `created` (the source copy would
-        # physically remain until overwritten), so a concurrent lookup at
-        # the same instant still hits.  Only recency moves.
-        e.last_used = now
-        status, evicted = tier0.store.try_put_entry(e)
-        if status != "stored":
-            hit.tier.store.try_put_entry(e)  # roll back where it lived
-            return
+        if hit.tier.shared:
+            # The holding tier is a cluster-SHARED pool: other workers'
+            # hierarchies end in it, so promotion COPIES the entry into
+            # this hierarchy's hot tier (the bytes just crossed the link;
+            # the pool copy physically remains and must stay visible to
+            # every other worker).  A distinct StoreEntry keeps the two
+            # copies' recency/bytes accounting independent.
+            from dataclasses import replace as _dc_replace
+            e = _dc_replace(hit.entry, last_used=now)
+            status, evicted = tier0.store.try_put_entry(e)
+            if status != "stored":
+                return
+            hit.entry.last_used = now
+        else:
+            e = hit.tier.store.discard(hit.entry.tokens)
+            if e is None:
+                return
+            # Promotion must never make an entry LESS visible: it has
+            # been servable since its original `created` (the source copy
+            # would physically remain until overwritten), so a concurrent
+            # lookup at the same instant still hits.  Only recency moves.
+            e.last_used = now
+            status, evicted = tier0.store.try_put_entry(e)
+            if status != "stored":
+                hit.tier.store.try_put_entry(e)  # roll back where it lived
+                return
         self.stats.promotions += 1
         for v in evicted:
             if self._place(v, 1, now, fresh=False) is not None:

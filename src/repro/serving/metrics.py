@@ -1,0 +1,73 @@
+"""Latency-distribution metrics shared by every serving backend.
+
+Means hide exactly what SLO serving is about: the tail.  This module
+computes the p50/p95/p99 TTFT and JCT quantiles plus per-SLO-class
+violation rates from any population of finished requests — the
+real-execution :class:`~repro.serving.engine.ServingRuntime`, the
+multi-worker :class:`~repro.serving.cluster.ClusterRuntime`, and the
+event-driven :class:`~repro.serving.simulator.Simulator` all feed their
+completions through :func:`latency_summary` so their ``summary()``
+outputs are directly comparable.
+
+Requests are duck-typed: anything with ``ttft``, ``jct``, ``slo_class``,
+``t_slo`` and ``slo_violated`` attributes works (both
+:class:`~repro.serving.request.Request` and the runtime's
+``ServedRequest`` qualify).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence
+
+import numpy as np
+
+PERCENTILES = (50, 95, 99)
+
+
+def percentile_row(values: Sequence[float], prefix: str
+                   ) -> Dict[str, float]:
+    """``{prefix_p50: ..., prefix_p95: ..., prefix_p99: ...}`` (empty when
+    there are no values — absent keys beat fabricated zeros)."""
+    vals = np.asarray(list(values), dtype=float)
+    if vals.size == 0:
+        return {}
+    return {f"{prefix}_p{p}": float(np.percentile(vals, p))
+            for p in PERCENTILES}
+
+
+def violation_rates(requests: Iterable) -> Dict[str, float]:
+    """Per-SLO-class violation rates over requests that carry an SLO
+    (``t_slo > 0``); ``slo_violation_rate`` is the all-class aggregate."""
+    with_slo: Dict[str, list] = {}
+    for r in requests:
+        if getattr(r, "t_slo", 0.0) > 0:
+            with_slo.setdefault(r.slo_class, []).append(bool(r.slo_violated))
+    out: Dict[str, float] = {}
+    all_flags = [f for flags in with_slo.values() for f in flags]
+    if all_flags:
+        out["slo_violation_rate"] = float(np.mean(all_flags))
+    for cls, flags in sorted(with_slo.items()):
+        out[f"slo_violation_rate_{cls}"] = float(np.mean(flags))
+    return out
+
+
+def route_counts(requests: Iterable) -> Dict[str, float]:
+    """``{route_<name>_completed: n}`` over requests that carry a
+    placement route — one shared implementation for the cluster runtime
+    and the topology-driven simulator."""
+    by_route: Dict[str, int] = {}
+    for r in requests:
+        route = getattr(r, "route", "")
+        if route:
+            by_route[route] = by_route.get(route, 0) + 1
+    return {f"route_{name}_completed": float(n)
+            for name, n in sorted(by_route.items())}
+
+
+def latency_summary(requests: Sequence) -> Dict[str, float]:
+    """The shared distribution block: TTFT/JCT p50/p95/p99 plus per-class
+    violation rates."""
+    out: Dict[str, float] = {}
+    out.update(percentile_row([r.ttft for r in requests], "ttft"))
+    out.update(percentile_row([r.jct for r in requests], "jct"))
+    out.update(violation_rates(requests))
+    return out

@@ -122,6 +122,13 @@ class KVWire:
                  estimator: Optional["GoodputEstimator"] = None):
         self.trace = trace
         self.estimator = estimator
+        if estimator is not None and estimator.initial is None:
+            # An unseeded estimator attached to a link starts from the
+            # link's *configured* trace, not a universal guess: on a
+            # 50 Mbps wire the controller's first selections would
+            # otherwise assume a ~1600x faster network until the first
+            # observations arrive.
+            estimator.initial = seed_bandwidth(trace)
         self.free_at = 0.0
         self.transfers = 0
         self.bytes_moved = 0
@@ -140,13 +147,34 @@ class KVWire:
         return WireTransfer(t_wait=start - ready, t_comm=t_comm, start=start)
 
 
+def seed_bandwidth(trace: BandwidthTrace) -> float:
+    """The estimator prior a link's configured trace implies: its rate at
+    t=0, or — for a trace that STARTS in an outage segment (rate 0, legal
+    since the outage fix) — the first positive segment's rate, so a zero
+    prior can never reach the latency model's divisions.  A trace with no
+    positive segment at all falls back to the detached prior."""
+    b0 = trace.at(0.0)
+    if b0 > 0:
+        return b0
+    return next((v for v in trace.values if v > 0),
+                GoodputEstimator.DETACHED_INITIAL)
+
+
 @dataclass
 class GoodputEstimator:
-    """EWMA over observed transfer goodputs — the controller's view of B."""
+    """EWMA over observed transfer goodputs — the controller's view of B.
+
+    ``initial`` is the pre-observation prior.  Leave it None to have the
+    first :class:`KVWire` the estimator is attached to seed it from the
+    link's configured :class:`BandwidthTrace` (``trace.at(0.0)``) — the
+    per-link default everywhere in the serving stack.  Only a completely
+    detached estimator falls back to the legacy 10 Gb/s guess."""
 
     alpha: float = 0.3
-    initial: float = 10 * GBPS
+    initial: Optional[float] = None
     _est: Optional[float] = None
+
+    DETACHED_INITIAL = 10 * GBPS  # last-resort prior (no link to seed from)
 
     def observe(self, nbytes: float, seconds: float) -> None:
         if seconds <= 0 or nbytes <= 0 or not np.isfinite(seconds):
@@ -157,4 +185,7 @@ class GoodputEstimator:
 
     @property
     def estimate(self) -> float:
-        return self._est if self._est is not None else self.initial
+        if self._est is not None:
+            return self._est
+        return self.initial if self.initial is not None \
+            else self.DETACHED_INITIAL

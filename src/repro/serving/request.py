@@ -57,6 +57,9 @@ class Request:
     ttft: float = 0.0
     breakdown: Dict[str, float] = field(default_factory=dict)
     chosen: str = ""
+    # Placement route ("p0->d1") when a NetworkTopology routed the request
+    # (multi-worker cluster / topology-driven simulator); "" otherwise.
+    route: str = ""
     slo_violated: bool = False
     retries: int = 0
 

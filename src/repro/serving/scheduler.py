@@ -73,7 +73,8 @@ class ContinuousScheduler:
     """Iteration-level scheduler: a priority queue of waiting requests plus
     a bounded set of in-flight slots."""
 
-    def __init__(self, cfg: Optional[SchedulerConfig] = None):
+    def __init__(self, cfg: Optional[SchedulerConfig] = None,
+                 manage_slots: bool = True):
         self.cfg = cfg or SchedulerConfig()
         self.admission = AdmissionController(self.cfg)
         self.waiting: List[Request] = []
@@ -81,7 +82,12 @@ class ContinuousScheduler:
         self.finished: List[Request] = []
         # Physical arena slot ids, recycled LIFO so a hot slot's cache row
         # is reused first.  len(running) <= max_slots keeps this non-empty
-        # whenever next_prefills admits.
+        # whenever next_prefills admits.  A multi-worker cluster passes
+        # manage_slots=False: slots are then owned by each DecodeWorker's
+        # local arena (the scheduler keeps only admission + priority), and
+        # requests are admitted through :meth:`admit` instead of
+        # :meth:`next_prefills`.
+        self.manage_slots = manage_slots
         self._free_slots: List[int] = list(range(self.cfg.max_slots))[::-1]
 
     # ------------------------------------------------------------------
@@ -143,10 +149,22 @@ class ContinuousScheduler:
             out.append(req)
         return out
 
+    def admit(self, now: float) -> Optional[Request]:
+        """Move the highest-priority waiting request into ``running``
+        WITHOUT assigning an arena slot — the multi-worker path: the
+        caller routes the request to a worker, which assigns a slot from
+        its own local pool.  Returns None when the queue is empty."""
+        req = self.pop_next(now)
+        if req is None:
+            return None
+        req.state = "prefilling"
+        self.running[req.rid] = req
+        return req
+
     def finish(self, rid: int) -> None:
         req = self.running.pop(rid, None)
         if req is not None:
-            if req.slot is not None:
+            if self.manage_slots and req.slot is not None:
                 self._free_slots.append(req.slot)
             req.state = "done"
             self.finished.append(req)

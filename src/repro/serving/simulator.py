@@ -28,9 +28,14 @@ from repro.controller import Decision, ServiceAwareController, ServiceContext
 from repro.controller.latency_model import predicted_latency
 from repro.core.profiles import IDENTITY_PROFILE, Profile
 from repro.serving.kvstore import PrefixKVStore, StoreEntry, TieredKVStore
-from repro.serving.network import BandwidthTrace, GoodputEstimator
+from repro.serving.network import (
+    BandwidthTrace,
+    GoodputEstimator,
+    seed_bandwidth,
+)
 from repro.serving.request import Request
 from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
+from repro.serving.topology import NetworkTopology
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +112,21 @@ class NodePool:
         free, nid = heapq.heappop(self.free_at)
         return max(free, now), nid
 
+    def acquire_node(self, nid: int, now: float) -> float:
+        """Reserve a SPECIFIC node (the topology-routed decode target):
+        returns its start time (>= now, after the node frees up)."""
+        for k, (free, n) in enumerate(self.free_at):
+            if n == nid:
+                self.free_at[k] = self.free_at[-1]
+                self.free_at.pop()
+                heapq.heapify(self.free_at)
+                return max(free, now)
+        raise KeyError(f"node {nid} is not idle-tracked")
+
+    def free_times(self) -> Dict[int, float]:
+        """Current per-node free times (the router's decode queue view)."""
+        return {nid: free for free, nid in self.free_at}
+
     def release(self, nid: int, until: float) -> None:
         heapq.heappush(self.free_at, (until, nid))
 
@@ -172,6 +192,28 @@ class SimResult:
         n = max(len(self.requests), 1)
         return {k: v / n for k, v in out.items()}
 
+    def summary(self) -> Dict[str, float]:
+        """Distribution summary of the run: means, p50/p95/p99 TTFT and
+        JCT tails, and per-SLO-class violation rates — the same metric
+        block the real-execution runtimes emit, so simulator sweeps are
+        directly comparable with engine runs."""
+        from repro.serving.metrics import latency_summary, route_counts
+        done = self.completed()
+        out: Dict[str, float] = {
+            "completed": float(len(done)),
+            "rejected": float(len(self.rejected())),
+            "slo_attainment": self.slo_attainment(),
+        }
+        if done:
+            out["mean_jct"] = self.mean_jct()
+            out["mean_ttft"] = self.mean_ttft()
+            makespan = max(r.done for r in done)
+            out["throughput_rps"] = (len(done) / makespan
+                                     if makespan > 0 else 0.0)
+        out.update(latency_summary(done))
+        out.update(route_counts(done))
+        return out
+
 
 def _sim_recompress(entry: StoreEntry, profile: Profile
                     ) -> Optional[Tuple[Profile, int]]:
@@ -202,21 +244,49 @@ class Simulator:
     * ``scheduler`` — a :class:`SchedulerConfig`; requests are then
       dispatched through :class:`ContinuousScheduler` (admission control +
       SLO-class priority order) rather than strict arrival order.
+    * ``topology`` + ``routing`` — a
+      :class:`~repro.serving.topology.NetworkTopology` of per-(prefill
+      node, decode node) serialized links; the pd scenario then routes
+      every transfer over its pair's own wire ("round_robin" baseline or
+      "load_aware" predicted-latency argmin), which is the event-driven
+      twin of :class:`~repro.serving.cluster.ClusterRuntime` for
+      large-scale sweeps.
     """
 
     def __init__(self, config: SimConfig, policy: Policy,
                  trace: BandwidthTrace, requests: Sequence[Request],
                  store: Optional[object] = None,
-                 scheduler: Optional[SchedulerConfig] = None):
+                 scheduler: Optional[SchedulerConfig] = None,
+                 topology: Optional[NetworkTopology] = None,
+                 routing: str = "load_aware"):
         self.cfg = config
         self.policy = policy
         self.trace = trace
         self.requests = list(requests)
         self.store = store
         self.scheduler_cfg = scheduler
+        # Per-(prefill node, decode node) link topology (ISSUE 5): the pd
+        # scenario then routes every transfer over the pair's own
+        # serialized KVWire — the same NetworkTopology object the
+        # real-execution ClusterRuntime drives, at event-driven scale.
+        self.topology = topology
+        if routing not in ("load_aware", "round_robin"):
+            # validated with or without a topology: a typo'd policy name
+            # should fail at construction, not when a topology is later
+            # added to the sweep
+            raise ValueError(f"unknown routing policy {routing!r}")
+        if topology is not None:
+            if (topology.n_prefill != config.n_prefill
+                    or topology.n_decode != config.n_decode):
+                raise ValueError(
+                    f"topology is {topology.n_prefill}x{topology.n_decode} "
+                    f"but the cluster has {config.n_prefill} prefill x "
+                    f"{config.n_decode} decode nodes")
+        self.routing = routing
+        self._rr_next = 0
         self.rng = np.random.default_rng(config.seed)
         self.estimator = GoodputEstimator(alpha=config.estimator_alpha,
-                                          initial=trace.at(0.0))
+                                          initial=seed_bandwidth(trace))
         if isinstance(store, TieredKVStore):
             if store.estimator is None:
                 store.estimator = self.estimator
@@ -246,9 +316,9 @@ class Simulator:
         return None
 
     def _run_on_pool(self, pool: NodePool, now: float, base_time: float,
-                     req: Request) -> Tuple[float, float]:
+                     req: Request) -> Tuple[float, float, int]:
         """Execute a compute task with failure/straggler handling.
-        Returns (finish_time, queue_wait)."""
+        Returns (finish_time, queue_wait, node_id)."""
         attempts = 0
         t = now
         queue_wait = 0.0
@@ -260,13 +330,36 @@ class Simulator:
                 else None
             if fail_at is None:
                 pool.release(nid, start + dur)
-                return start + dur, queue_wait
+                return start + dur, queue_wait, nid
             # node died mid-task: lose partial work, re-queue elsewhere
             pool.release(nid, start + fail_at + 1.0)  # node recovers later
             req.retries += 1
             req.breakdown["retry"] = req.breakdown.get("retry", 0.0) + fail_at
             attempts += 1
             t = start + fail_at
+
+    def _run_on_node(self, pool: NodePool, nid: int, now: float,
+                     base_time: float, req: Request) -> Tuple[float, float]:
+        """Execute on a SPECIFIC node (topology-routed placement): the
+        full straggler/transient/failure model applies, but a mid-task
+        failure RETRIES ON THE PINNED NODE after it recovers instead of
+        re-routing (the route decided the placement).  Returns
+        (finish_time, queue_wait)."""
+        start = pool.acquire_node(nid, now)
+        queue_wait = start - now
+        t = start
+        attempts = 0
+        while True:
+            dur = self._task_time(base_time, pool, nid)
+            fail_at = self._maybe_fail(dur) \
+                if attempts < self.cfg.max_retries else None
+            if fail_at is None:
+                pool.release(nid, t + dur)
+                return t + dur, queue_wait
+            req.retries += 1
+            req.breakdown["retry"] = req.breakdown.get("retry", 0.0) + fail_at
+            attempts += 1
+            t = t + fail_at + 1.0     # pinned node recovers, then retry
 
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
@@ -327,7 +420,32 @@ class Simulator:
         return dt
 
     # ------------------------------------------------------------------
+    def _choose_decode(self, src: int, ready: float, payload_hint: float
+                       ) -> int:
+        """Pick the decode node for a transfer leaving prefill node
+        ``src``: round-robin cycles the decode nodes; load-aware takes the
+        argmin of (link reservation backlog + estimated transfer at the
+        link's own goodput estimate + decode node busy time) — predicted
+        completion over live queue depths, per-link estimators included.
+        """
+        topo = self.topology
+        if self.routing == "round_robin":
+            d = self._rr_next % topo.n_decode
+            self._rr_next += 1
+            return d
+        free = self.decode.free_times()
+
+        def cost(d: int) -> float:
+            link = topo.link(src, d)
+            t_link = (max(link.free_at - ready, 0.0)
+                      + payload_hint / max(link.estimator.estimate, 1e-9))
+            return t_link + max(free.get(d, 0.0) - ready, 0.0)
+
+        return min(range(topo.n_decode), key=lambda d: (cost(d), d))
+
     def _run_pd(self, req: Request, start: Optional[float] = None) -> None:
+        if self.topology is not None:
+            return self._run_pd_topology(req, start)
         cfg = self.cfg
         start = req.arrival if start is None else start
         t_prefill_base = req.ctx_tokens / cfg.prefill_tok_s
@@ -337,8 +455,8 @@ class Simulator:
         req.chosen = profile.strategy.short_name()
 
         # prefill
-        t, q_wait = self._run_on_pool(self.prefill, start,
-                                      t_prefill_base, req)
+        t, q_wait, pid = self._run_on_pool(self.prefill, start,
+                                           t_prefill_base, req)
         req.breakdown["prefill"] = t - start - q_wait \
             - req.breakdown.get("retry", 0.0)
         req.breakdown["queue"] = q_wait + (start - req.arrival)
@@ -356,13 +474,73 @@ class Simulator:
         req.ttft = t - req.arrival  # first decode token comes right after
 
         # decode
-        t, q_wait2 = self._run_on_pool(self.decode, t, t_decode_base, req)
+        t, q_wait2, _ = self._run_on_pool(self.decode, t, t_decode_base, req)
         req.breakdown["decode"] = t_decode_base
         req.breakdown["queue"] += q_wait2
         req.done = t
         # Metric-matched feedback (same rule as the runtime's _finish):
         # the bandit's violation cooldown fires on the latency reported as
         # slo_violated, never a different quantity.
+        metric = self._slo_metric(req)
+        observed = req.ttft if metric == "ttft" else req.jct
+        req.slo_violated = req.t_slo > 0 and observed > req.t_slo
+        self.policy.feedback(ctx, decision, observed)
+
+    def _run_pd_topology(self, req: Request,
+                         start: Optional[float] = None) -> None:
+        """PD over the per-link topology: prefill on whichever node frees
+        first (node ``src``), route the transfer to a decode node
+        (round-robin or load-aware), bill it on the (src, dst) pair's OWN
+        serialized :class:`~repro.serving.network.KVWire` (concurrent
+        transfers on the same link queue — ``wire_wait``; different links
+        overlap), then decode pinned on ``dst``.  The profile decision is
+        made AFTER the route is known, from the route's per-link goodput
+        estimate, and the context carries the route id so the residual
+        bandit learns each link's drift separately."""
+        from repro.serving.topology import route_name
+        cfg = self.cfg
+        start = req.arrival if start is None else start
+        t_prefill_base = req.ctx_tokens / cfg.prefill_tok_s
+        t_decode_base = req.out_tokens / cfg.decode_tok_s
+
+        # prefill
+        t, q_wait, src = self._run_on_pool(self.prefill, start,
+                                           t_prefill_base, req)
+        req.breakdown["prefill"] = t - start - q_wait \
+            - req.breakdown.get("retry", 0.0)
+        req.breakdown["queue"] = q_wait + (start - req.arrival)
+
+        # route + profile decision at the route's own bandwidth view
+        dst = self._choose_decode(src, t, req.kv_bytes)
+        link = self.topology.link(src, dst)
+        req.route = route_name(src, dst)
+        ctx = ServiceContext(
+            workload=req.workload, bandwidth=link.estimator.estimate,
+            t_slo=req.t_slo, q_min=req.q_min,
+            t_model=t_prefill_base + t_decode_base, kv_bytes=req.kv_bytes,
+            slo_metric=self._slo_metric(req), route=req.route)
+        profile, decision = self.policy.choose(req, ctx)
+        req.chosen = profile.strategy.short_name()
+
+        # compress -> per-link serialized transfer -> decompress
+        v = req.kv_bytes
+        t_c = 0.0 if profile.s_enc == float("inf") else v / profile.s_enc
+        payload = v / profile.cr
+        tr = link.send(t + t_c, payload)
+        t_d = 0.0 if profile.s_dec == float("inf") else v / profile.s_dec
+        req.breakdown["compress"] = t_c
+        req.breakdown["wire_wait"] = tr.t_wait
+        req.breakdown["comm"] = tr.t_comm
+        req.breakdown["decompress"] = t_d
+        t = t + t_c + tr.t_wait + tr.t_comm + t_d
+        req.ttft = t - req.arrival  # first decode token comes right after
+
+        # decode, pinned on the routed node
+        t_end, q_wait2 = self._run_on_node(self.decode, dst, t,
+                                           t_decode_base, req)
+        req.breakdown["decode"] = t_decode_base
+        req.breakdown["queue"] += q_wait2
+        req.done = t_end
         metric = self._slo_metric(req)
         observed = req.ttft if metric == "ttft" else req.jct
         req.slo_violated = req.t_slo > 0 and observed > req.t_slo
@@ -409,8 +587,8 @@ class Simulator:
                 recompute = True
 
         if recompute:
-            t, q_wait = self._run_on_pool(self.prefill, start,
-                                          t_prefill_base, req)
+            t, q_wait, _ = self._run_on_pool(self.prefill, start,
+                                             t_prefill_base, req)
             req.breakdown["prefill"] = t - start - q_wait \
                 - req.breakdown.get("retry", 0.0)
             req.breakdown["queue"] = q_wait + sched_wait
@@ -496,7 +674,7 @@ class Simulator:
         if frac < 1.0:
             # Partial prefix hit: the uncovered prompt suffix still needs
             # a top-up prefill on the prefill pool.
-            t_end, q_wait = self._run_on_pool(
+            t_end, q_wait, _ = self._run_on_pool(
                 self.prefill, fetch_done, (1.0 - frac) * t_prefill_base, req)
             req.breakdown["queue"] += q_wait
             req.breakdown["prefill"] = t_end - fetch_done - q_wait \

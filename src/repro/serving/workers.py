@@ -1,0 +1,434 @@
+"""Worker abstractions of the disaggregated serving runtime.
+
+The paper's deployment target is a PD-separated *cluster*: many prefill
+workers feeding many decode workers over heterogeneous links.  This module
+holds the two worker types that
+:class:`~repro.serving.cluster.ClusterRuntime` composes N x M (and that the
+1x1 :class:`~repro.serving.engine.ServingRuntime` facade is built from):
+
+* :class:`PrefillWorker` — one prefill engine: its own jitted batch-1
+  prefill stream, the codec-cost model for the compress stage it feeds the
+  egress link, and the controller/static profile selection for the KV it
+  emits.  Within an iteration, requests assigned to the same prefill
+  worker serialize on it (the ``busy`` offset); requests on different
+  workers run concurrently.
+* :class:`DecodeWorker` — one decode engine: its own fixed-capacity slot
+  arena (ONE cache pytree with a leading slot axis, advanced by a single
+  masked jitted decode per iteration), its own local slot-id pool, and its
+  own decode-side KV tier hierarchy (HBM/DRAM are worker-local; the remote
+  pool tier may be shared cluster-wide — see
+  :class:`~repro.serving.kvstore.TieredKVStore`).
+
+Both workers read the model through a shared mutable :class:`ModelHandle`
+so a runtime-level swap of (cfg, params) — the test fixtures pin the
+session-cached reference model this way — reaches every worker.
+
+This module also owns the pieces the old monolithic engine shared between
+its one-shot and continuous paths: :class:`RuntimeConfig`,
+:class:`ServedRequest`, the PD codec stages (:func:`compress_kvs` /
+:func:`decompress_kvs`) and the demotion re-compression hook
+(:func:`recompress_entry`).  ``repro.serving.engine`` re-exports them, so
+existing imports keep working.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.controller import Decision, ServiceAwareController, ServiceContext
+from repro.core.pipeline import CompressedKV, CompressionPipeline
+from repro.core.profiles import Profile
+from repro.core.quality import (
+    _jitted_steps,
+    copy_cache_slot,
+    extract_kv,
+    inject_kv,
+)
+from repro.core.strategy import StrategyConfig
+from repro.serving.kvstore import TierSpec
+from repro.serving.request import Request
+
+
+def _select_profile(controller: Optional[ServiceAwareController],
+                    static_profile: Optional[Profile],
+                    ctx: ServiceContext
+                    ) -> Tuple[Profile, Optional[Decision]]:
+    """Shared controller / static / identity three-way profile choice."""
+    if controller is not None:
+        d = controller.select(ctx)
+        return d.profile, d
+    if static_profile is not None:
+        return static_profile, None
+    from repro.core.profiles import IDENTITY_PROFILE
+    return IDENTITY_PROFILE, None
+
+
+# ---------------------------------------------------------------------------
+# Shared PD codec stages (one-shot engine AND per-request continuous runtime)
+# ---------------------------------------------------------------------------
+def compress_kvs(strategy: StrategyConfig, kvs: Sequence[Any]
+                 ) -> Tuple[List[Any], int, float]:
+    """Compress each KV prefix for the wire.  Returns
+    ``(payloads, wire_bytes, measured_seconds)``."""
+    pipe = CompressionPipeline(strategy)
+    t0 = time.perf_counter()
+    comps = [pipe.compress(kv) for kv in kvs]
+    t_wall = time.perf_counter() - t0
+    return comps, sum(c.total_bytes() for c in comps), t_wall
+
+
+def decompress_kvs(comps: Sequence[CompressedKV]
+                   ) -> Tuple[List[Any], float]:
+    """Restore wire payloads to KV.  Returns ``(kvs, measured_seconds)``."""
+    t0 = time.perf_counter()
+    kvs = [CompressionPipeline(c.strategy).decompress(c) for c in comps]
+    t_wall = time.perf_counter() - t0
+    return kvs, t_wall
+
+
+def recompress_entry(entry, profile: Profile) -> Optional[Tuple[Any, int]]:
+    """Tier demotion / refetch-smaller hook: really re-encode a stored
+    ``(CompressedKV, first, s_dec)`` payload with ``profile``.  Returns
+    None when it would not shrink."""
+    comp, first, _ = entry.payload
+    if comp.strategy == profile.strategy:
+        return None
+    restored, _ = decompress_kvs([comp])
+    comps, wire, _ = compress_kvs(profile.strategy, restored)
+    if wire >= entry.wire_bytes:
+        return None
+    return (comps[0], first, profile.s_dec), wire
+
+
+# ---------------------------------------------------------------------------
+# Runtime configuration / outcomes
+# ---------------------------------------------------------------------------
+@dataclass
+class RuntimeConfig:
+    seq: int = 96                 # prompt tokens (padded/truncated)
+    decode_tokens: int = 12       # generation budget per request
+    # Serving scenario: "pool" = KV-disaggregated prefix caching (cold
+    # requests prefill locally, pool writes are off the critical path);
+    # "pd" = PD separation (every cold request's compressed KV crosses the
+    # serialized wire prefill -> compress -> transfer -> decompress ->
+    # decode, ON the critical path).
+    mode: str = "pool"
+    # Virtual-clock cost model.  None = measure wall-clock (real execution
+    # time of the tiny model); a float models a loaded cluster, which is the
+    # paper's pool regime where prefill is the expensive path.  When set,
+    # codec stages are modelled from the profile's measured throughputs
+    # (V/s_enc, V/s_dec — Eq. 1) so sweeps are deterministic.
+    prefill_tok_s: Optional[float] = None
+    decode_tok_s: Optional[float] = None
+    pool_fetch_overhead: float = 0.002   # pool RPC setup cost (s)
+    store_capacity: int = 64 << 20       # wire bytes (remote/pool tier)
+    store_block: int = 16
+    # KV memory hierarchy (ISSUE 4).  None builds the default: pool mode
+    # gets HBM -> DRAM -> remote (hot/dram capacities below; HBM/DRAM are
+    # per-decode-worker, the remote pool tier is shared cluster-wide over
+    # the runtime's BandwidthTrace); PD mode gets, per decode worker, a
+    # single remote tier sharing that worker's ingress link (the pool
+    # lives across the same wire the compressed KV crosses).  Pass an
+    # explicit TierSpec list to override either (each worker then builds
+    # its own private tiers from the specs; pass pre-built
+    # :class:`~repro.serving.kvstore.KVTier` objects to share tiers).
+    tiers: Optional[Sequence[TierSpec]] = None
+    hot_tier_bytes: int = 4 << 20
+    dram_tier_bytes: int = 16 << 20
+    # PD cold path: what the decode arena is materialized from.  False
+    # (default) keeps the prefill worker's exact cache — cold decode is
+    # numerically identical to the pool scenario (token-exact vs the
+    # pinned PR-1 fixture); the compressed payload still crosses the wire
+    # byte-for-byte and is what later pool hits decode from, so the
+    # profile's quality loss surfaces exactly where the pool path's does.
+    # True injects the wire-restored KV instead (quality-faithful decode;
+    # tokens then reflect the selected profile's loss immediately).
+    pd_inject_restored: bool = False
+
+
+@dataclass
+class ServedRequest:
+    """Per-request outcome of the continuous runtime (the per-request
+    analogue of :class:`~repro.serving.engine.ServedBatch`)."""
+
+    rid: int
+    workload: str
+    slo_class: str
+    text: str
+    tokens: np.ndarray
+    profile: str
+    pool_hit: bool
+    kv_bytes: int
+    wire_bytes: int               # bytes this request moved over the wire
+    arrival: float
+    done: float
+    ttft: float
+    slot: int = -1                # arena slot that served the request
+    # Placement: which (prefill worker -> decode worker) route served the
+    # request ("p0->d0"; the slot id above is LOCAL to that decode worker).
+    route: str = ""
+    # Critical-path decomposition; sums exactly to jct.  Keys: queue,
+    # prefill | comm+decompress (pool hit), decode, stall (time spent
+    # waiting on the iteration's other stream), and — PD mode — compress,
+    # wire_wait (queueing behind other transfers on the serialized wire),
+    # comm, decompress, all on the request's critical path.
+    breakdown: Dict[str, float] = field(default_factory=dict)
+    # Off-critical-path cost of writing the compressed prefix to the pool
+    # (compress + wire), charged to the background writer, not the request.
+    # Always 0.0 in PD mode: there the transfer IS the critical path, and
+    # the transferred bytes seed the decode-side pool for free.
+    t_pool_write: float = 0.0
+    # Which latency the SLO bounded ("ttft" | "jct"), the bound itself,
+    # and whether it was violated — the bandit observed the SAME metric.
+    slo_metric: str = "jct"
+    t_slo: float = 0.0
+    slo_violated: bool = False
+
+    @property
+    def jct(self) -> float:
+        return self.done - self.arrival
+
+
+@dataclass
+class Slot:
+    """Host-side bookkeeping for one occupied arena slot (the device-side
+    state — cache row, position, live flag — lives in the owning
+    :class:`DecodeWorker`'s arena arrays)."""
+
+    req: Request
+    idx: int                      # arena slot index (row in the cache pytree)
+    toks: List[int]               # generated tokens (incl. first)
+    pool_hit: bool
+    profile: str
+    wire_bytes: int
+    breakdown: Dict[str, float]
+    ttft: float
+    route: str = ""               # placement route ("p0->d1")
+    pool_write: float = 0.0       # off-path compress+write cost (misses)
+    # Controller feedback deferred to _finish so the bandit observes the
+    # request's realized critical-path latency (= breakdown sum = jct),
+    # not the off-critical-path pool write.
+    ctx: Optional[ServiceContext] = None
+    decision: Optional[Decision] = None
+
+
+@dataclass
+class ModelHandle:
+    """Shared mutable reference to the serving model.  Workers read
+    (cfg, params) through this handle at call time, so a runtime-level
+    swap — e.g. the tests pinning the session-cached reference model —
+    reaches every worker without rebuilding them."""
+
+    cfg: Any
+    params: Any
+
+
+def codec_cost(cfg: RuntimeConfig, measured: float, nbytes: float,
+               speed: float) -> float:
+    """Codec stage cost: measured wall-clock, or — under the virtual
+    clock — modelled from the profile's throughput (V/s, Eq. 1)."""
+    if cfg.prefill_tok_s is None:
+        return measured
+    return 0.0 if speed == float("inf") else nbytes / speed
+
+
+# ---------------------------------------------------------------------------
+# Prefill worker
+# ---------------------------------------------------------------------------
+class PrefillWorker:
+    """One prefill engine of the cluster: runs real batch-1 prefills,
+    selects/compresses the KV it ships, and carries the codec-cost model.
+    Requests placed on the same worker within an iteration serialize on it
+    (the caller threads the ``busy`` offset); distinct workers overlap."""
+
+    def __init__(self, wid: int, model: ModelHandle, cfg: RuntimeConfig,
+                 controller: Optional[ServiceAwareController] = None,
+                 static_profile: Optional[Profile] = None):
+        self.wid = wid
+        self.name = f"p{wid}"
+        self.model = model
+        self.cfg = cfg
+        self.controller = controller
+        self.static_profile = static_profile
+        self.prefills = 0             # lifetime prefill count
+        self.busy_seconds = 0.0       # lifetime prefill-stream occupancy
+        # EWMA of measured prefill wall-clock: the router's t_model
+        # estimate when no virtual clock is configured.
+        self._ewma_prefill: Optional[float] = None
+        self._pre1 = None
+
+    # ------------------------------------------------------------------
+    def _prefill_fn(self):
+        if self._pre1 is None:
+            max_len = self.cfg.seq + self.cfg.decode_tokens + 2
+            self._pre1, _, _ = _jitted_steps(
+                self.model.cfg.name, self.cfg.seq, 1, max_len)
+        return self._pre1
+
+    def expected_prefill_s(self, ctx_tokens: int) -> float:
+        """The router's estimate of this worker's prefill time: exact
+        under the virtual clock, EWMA of measured wall-clock otherwise."""
+        if self.cfg.prefill_tok_s:
+            return ctx_tokens / self.cfg.prefill_tok_s
+        return self._ewma_prefill if self._ewma_prefill is not None else 0.0
+
+    # ------------------------------------------------------------------
+    def prefill(self, req: Request, tokens: np.ndarray):
+        """Real batch-1 prefill.  Returns ``(caches, first_token,
+        t_prefill)`` with ``t_prefill`` under the configured cost model."""
+        pre1 = self._prefill_fn()
+        t0 = time.perf_counter()
+        logits, caches = pre1(self.model.params, {"tokens": tokens[None, :]})
+        jax.block_until_ready(logits)
+        t_wall = time.perf_counter() - t0
+        t_prefill = (req.ctx_tokens / self.cfg.prefill_tok_s
+                     if self.cfg.prefill_tok_s else t_wall)
+        self.prefills += 1
+        self.busy_seconds += t_prefill
+        self._ewma_prefill = t_wall if self._ewma_prefill is None \
+            else 0.7 * self._ewma_prefill + 0.3 * t_wall
+        first = int(np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))[0])
+        return caches, first, t_prefill
+
+    # ------------------------------------------------------------------
+    def select_and_compress(self, req: Request, caches, t_prefill: float,
+                            bandwidth: float, slo_default: str,
+                            route: str = ""):
+        """Controller decision + real compression of the prefix KV.
+        ``bandwidth`` is the selecting route's goodput estimate (per-link
+        in a cluster) and ``route`` its identity, so the controller's
+        residual bandit learns each link's drift separately.  Returns
+        ``(comp, ctx, decision, profile, t_compress)``."""
+        kv = extract_kv(self.model.cfg, caches, 0, upto=self.cfg.seq)
+        ctx = ServiceContext(
+            workload=req.workload, bandwidth=bandwidth,
+            t_slo=req.t_slo, q_min=req.q_min, t_model=t_prefill,
+            kv_bytes=kv.nbytes_wire(),
+            slo_metric=req.resolved_slo_metric(slo_default),
+            route=route)
+        profile, decision = _select_profile(self.controller,
+                                            self.static_profile, ctx)
+        comps, _, t_wall = compress_kvs(profile.strategy, [kv])
+        t_compress = codec_cost(self.cfg, t_wall, kv.nbytes_wire(),
+                                profile.s_enc)
+        return comps[0], ctx, decision, profile, t_compress
+
+
+# ---------------------------------------------------------------------------
+# Decode worker
+# ---------------------------------------------------------------------------
+class DecodeWorker:
+    """One decode engine of the cluster: a fixed-capacity slot arena (ONE
+    cache pytree, leading axis ``n_slots``), a LIFO local slot-id pool,
+    and the worker's decode-side KV tier hierarchy."""
+
+    def __init__(self, wid: int, model: ModelHandle, cfg: RuntimeConfig,
+                 n_slots: int, store: Any):
+        self.wid = wid
+        self.name = f"d{wid}"
+        self.model = model
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.store = store
+        self.max_len = cfg.seq + cfg.decode_tokens + 2
+        self.slots: Dict[int, Slot] = {}
+        # LIFO so a hot slot's cache row is reused first (same recycling
+        # discipline the scheduler used when it owned the slot ids).
+        self.free_slots: List[int] = list(range(n_slots))[::-1]
+        self._dec_arena = None
+        self._arena: Any = None          # cache pytree, leading axis n_slots
+        self._positions = np.zeros(n_slots, np.int32)  # next write pos
+        self._last_tok = np.zeros(n_slots, np.int32)   # last emitted tok
+        self.decode_steps = 0            # lifetime arena decode calls
+
+    # ------------------------------------------------------------------
+    @property
+    def free_slot_count(self) -> int:
+        return len(self.free_slots)
+
+    @property
+    def occupancy(self) -> int:
+        return len(self.slots)
+
+    # ------------------------------------------------------------------
+    def ensure_arena(self):
+        if self._arena is None:
+            from repro.models.transformer import init_cache, plan_stack
+            plan = plan_stack(self.model.cfg)
+            if any(s.kind != "attn"
+                   for s in plan.prefix_specs + plan.period_specs):
+                raise NotImplementedError(
+                    "slot arena masking assumes attention-only caches "
+                    "(SSM states advance unmasked)")
+            self._arena = init_cache(self.model.cfg, self.n_slots,
+                                     self.max_len)
+        return self._arena
+
+    def _arena_fn(self):
+        if self._dec_arena is None:
+            _, _, self._dec_arena = _jitted_steps(
+                self.model.cfg.name, self.cfg.seq, self.n_slots,
+                self.max_len)
+        return self._dec_arena
+
+    # ------------------------------------------------------------------
+    def copy_from_caches(self, caches, idx: int) -> None:
+        """Materialize arena row ``idx`` from a prefill worker's batch-1
+        cache (the cold path's slot hand-off)."""
+        self._arena = copy_cache_slot(self.model.cfg, self.ensure_arena(),
+                                      caches, idx)
+
+    def inject_restored(self, kv, idx: int) -> None:
+        """Materialize arena row ``idx`` from a wire-restored KV."""
+        self._arena = inject_kv(self.model.cfg, self.ensure_arena(), idx, kv)
+
+    def fetch_entry(self, entry, idx: int) -> Tuple[int, float]:
+        """Decompress a stored pool entry and inject it into arena slot
+        ``idx``.  Returns ``(first_token, t_decompress)``.  Cache injection
+        is host-side bookkeeping of the miniature (the cold path's
+        equivalent writes happen inside prefill), so it is not billed to
+        the virtual clock."""
+        comp, first, s_dec = entry.payload
+        restored, t_wall = decompress_kvs([comp])
+        t_decompress = codec_cost(self.cfg, t_wall, entry.kv_bytes, s_dec)
+        self.inject_restored(restored[0], idx)
+        return int(first), t_decompress
+
+    # ------------------------------------------------------------------
+    def occupy(self, slot: Slot, first: int) -> None:
+        self.slots[slot.req.rid] = slot
+        self._positions[slot.idx] = self.cfg.seq
+        self._last_tok[slot.idx] = first
+
+    def release(self, slot: Slot) -> None:
+        self.free_slots.append(slot.idx)
+        del self.slots[slot.req.rid]
+
+    # ------------------------------------------------------------------
+    def decode_iteration(self, active: List[Slot]) -> float:
+        """Advance every slot in ``active`` one token with a SINGLE masked
+        jitted arena decode (per-slot positions, on-device argmax, one
+        (B,) token pull).  Returns the measured wall seconds."""
+        mask = np.zeros(self.n_slots, bool)
+        for slot in active:
+            mask[slot.idx] = True
+        dec = self._arena_fn()
+        t0 = time.perf_counter()
+        nxt, self._arena = dec(
+            self.model.params, self.ensure_arena(),
+            jnp.asarray(self._last_tok[:, None]),
+            jnp.asarray(self._positions), jnp.asarray(mask))
+        nxt = np.asarray(nxt)        # the step's single host sync
+        wall = time.perf_counter() - t0
+        for slot in active:
+            t = int(nxt[slot.idx])
+            slot.toks.append(t)
+            self._last_tok[slot.idx] = t
+            self._positions[slot.idx] += 1
+        self.decode_steps += 1
+        return wall

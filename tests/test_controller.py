@@ -124,7 +124,7 @@ def test_residuals_use_select_time_prediction(synthetic_profiles):
         ctx_obs = _ctx(bandwidth=2e8 * drift)
         observed = d.predicted + 0.125   # constant unmodelled overhead
         c.observe(ctx_obs, d, observed)
-        bandit = c._bandits[("qalike", d.bucket)]
+        bandit = c._bandits[("qalike", d.bucket, "")]
         res = bandit.residual_of(d.interval, d.profile)
         alpha = bandit.config.alpha
         assert res == pytest.approx(alpha * 0.125), \
@@ -155,3 +155,50 @@ def test_select_fetch_trades_tiers(controller):
     assert d.option.variant == "reencoded"
     assert d.predicted == pytest.approx(tier_fetch_latency(reenc(1e7)))
     assert controller.select_fetch(_ctx(bandwidth=1e8), []) is None
+
+
+# ---------------------------------------------------------------------------
+# Per-route service contexts (ISSUE 5): the bandit learns per-link drift
+# ---------------------------------------------------------------------------
+def test_per_route_bandits_learn_independent_residuals(synthetic_profiles):
+    """Observations on one cluster link must not pollute another's
+    residual corrections: a congested route accumulates its own positive
+    residual while a clean route's stays at zero."""
+    from dataclasses import replace
+
+    c = ServiceAwareController({w: synthetic_profiles for w in WORKLOADS})
+    base = _ctx(bandwidth=1e7)
+    slow = replace(base, route="p0->d1")
+    fast = replace(base, route="p0->d0")
+
+    d = c.select(slow)
+    c.observe(slow, d, d.predicted + 1.0)    # unmodelled congestion
+    slow_bandit = c._bandits[("qalike", d.bucket, "p0->d1")]
+    res_slow = slow_bandit.residual_of(d.interval, d.profile)
+    assert res_slow > 0.0
+
+    # the clean route's bandit is a DIFFERENT instance with zero residual
+    d2 = c.select(fast)
+    fast_bandit = c._bandits[("qalike", d2.bucket, "p0->d0")]
+    assert fast_bandit is not slow_bandit
+    assert fast_bandit.residual_of(d2.interval, d2.profile) == 0.0
+    # ... and the routeless key ("" — single-link deployments) is intact
+    assert ("qalike", d.bucket, "") in c._bandits
+
+
+def test_predict_is_side_effect_free(controller):
+    """The routing layer probes every candidate route with predict();
+    that must advance neither the bandit step counter nor its RNG, so
+    routing cannot perturb the selection stream."""
+    ctx = _ctx(bandwidth=1e7)
+    bucket = controller._bucket_of(ctx.q_min)
+    bandit = controller._bandits[("qalike", bucket, "")]
+    state_before = bandit._rng.getstate()
+    step_before = bandit._step
+    p1 = controller.predict(ctx)
+    p2 = controller.predict(_ctx(bandwidth=1e10))
+    assert p1 > 0 and p2 > 0
+    assert bandit._rng.getstate() == state_before
+    assert bandit._step == step_before
+    # prediction tracks the latency model: scarce bandwidth costs more
+    assert p1 > p2

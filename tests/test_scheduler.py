@@ -182,3 +182,41 @@ def test_sim_pool_partial_prefix_hit_pays_topup_prefill(synthetic_profiles):
     t_cold = 2000 / 500.0
     assert partial.breakdown["prefill"] < t_cold
     assert partial.ttft < t_cold + 0.5
+
+
+def test_sim_scheduled_aging_prevents_batch_starvation():
+    """Starvation-freedom (ISSUE 5 satellite): a batch request submitted
+    behind a continuous interactive flood is admitted once aging promotes
+    it past the flood — long before the flood drains — while with aging
+    disabled it is served dead last.  Deterministic: one prefill node,
+    constant trace, no faults."""
+    def run(aging_s):
+        reqs = [Request(rid=0, workload="qalike", arrival=0.0,
+                        ctx_tokens=1000, out_tokens=1, kv_bytes=1e5,
+                        q_min=0.0, slo_class="batch")]
+        reqs += [Request(rid=1 + i, workload="qalike", arrival=0.05 * i,
+                         ctx_tokens=1000, out_tokens=1, kv_bytes=1e5,
+                         q_min=0.0, slo_class="interactive")
+                 for i in range(60)]
+        res = Simulator(
+            SimConfig(scenario="pd", n_prefill=1, n_decode=1,
+                      prefill_tok_s=1000.0, decode_tok_s=100.0),
+            NoCompressionPolicy(), BandwidthTrace.constant(1 * GBPS),
+            reqs, scheduler=SchedulerConfig(max_queue=1000,
+                                            aging_s=aging_s)).run()
+        assert len(res.completed()) == 61        # nothing starved FOREVER
+        batch = next(r for r in res.requests if r.slo_class == "batch")
+        last_inter = max(r.done for r in res.requests
+                         if r.slo_class == "interactive")
+        return batch.done, last_inter
+
+    aged_done, last_inter = run(aging_s=1.0)
+    # Aging promotes one class per second: the batch request overtakes
+    # every interactive that arrived >2 s after it, so it is served
+    # mid-flood rather than after the ~60 s backlog drains.
+    assert aged_done < 30.0
+    assert aged_done < last_inter
+    starved_done, last_inter0 = run(aging_s=0.0)
+    assert starved_done > 55.0                   # served dead last
+    assert starved_done > last_inter0 - 2.0
+    assert starved_done > 2 * aged_done

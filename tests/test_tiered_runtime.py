@@ -240,3 +240,29 @@ def test_simulator_tiered_fetches_contend():
     waits = sorted(r.breakdown.get("wire_wait", 0.0) for r in res.requests)
     assert waits[0] == 0.0
     assert waits[1] == pytest.approx(1.0)   # 100 KB over 100 KB/s ahead
+
+
+@pytest.mark.slow
+def test_pd_explicit_tiers_still_share_the_transfer_wire(reference_model):
+    """Review regression (ISSUE 5): an EXPLICIT RuntimeConfig.tiers list
+    in PD mode must keep the old engine's rule — the pool tier's link IS
+    the PD transfer wire (fetches contend with cold transfers) — not a
+    fresh private wire."""
+    from repro.serving.engine import RuntimeConfig, ServingRuntime
+    rt = ServingRuntime(
+        static_profile=_profile(),
+        config=RuntimeConfig(seq=48, decode_tokens=4, prefill_tok_s=2000.0,
+                             decode_tok_s=500.0, mode="pd",
+                             tiers=_remote_only(0.05 * GBPS)),
+        trace=BandwidthTrace.constant(0.05 * GBPS),
+        scheduler=SchedulerConfig(max_slots=4, max_prefills_per_step=2,
+                                  max_queue=32))
+    rt.model_cfg, rt.params = reference_model
+    assert rt.store.tiers[-1].wire is rt.wire
+    rt.submit("qalike", prompt_seed=5)
+    rt.run()
+    rt.submit("qalike", prompt_seed=5)
+    rt.run()
+    cold, hit = rt.completed
+    assert not cold.pool_hit and hit.pool_hit
+    assert rt.wire.transfers == 2       # cold transfer + pool fetch

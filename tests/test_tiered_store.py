@@ -234,3 +234,44 @@ def test_summary_aggregates_and_per_tier_detail():
     assert s["capacity_bytes"] == 13_000
     assert s["tier0_hbm_entries"] == 1 and s["tier0_hbm_hits"] == 1
     assert "tier2_remote_used_bytes" in s
+
+
+def test_promotion_out_of_a_shared_tier_copies_not_moves():
+    """Cluster-shared pool tier (ISSUE 5): several workers' hierarchies
+    end in ONE remote KVTier.  A fetch that promotes the entry into the
+    fetching worker's private HBM must COPY it — moving it would silently
+    remove the prefix from the disaggregated pool and every OTHER
+    worker's next lookup would cold-miss."""
+    from repro.serving import KVTier
+
+    shared = KVTier(TierSpec("remote", 10_000, bandwidth=1e6,
+                             fetch_overhead=2e-3, observe_goodput=True),
+                    block=8)
+    shared.shared = True
+    mk = lambda: TieredKVStore(
+        [TierSpec("hbm", 1000, bandwidth=1e9), shared], block=8)
+    d0, d1 = mk(), mk()
+    # the prefix lands in the shared pool (e.g. demoted / written through)
+    d0.put(_toks(0), "payload", 400, kv_bytes=400.0, now=0.0, tier=1)
+    assert d1.contains(_toks(0), now=1.0)
+
+    # d0 fetch-hits and promotes into ITS hbm...
+    hit = d0.lookup(_toks(0), now=1.0)
+    assert hit.tier.name == "remote"
+    d0.fetch(hit, ready=1.0)
+    assert d0.stats.promotions == 1
+    assert d0.tiers[0].store.contains(_toks(0), now=2.0)
+    # ... and the shared pool copy is STILL there for d1
+    assert shared.store.contains(_toks(0), now=2.0)
+    hit1 = d1.lookup(_toks(0), now=2.0)
+    assert hit1 is not None and hit1.tier is shared
+    # capacity accounting: both copies are billed where they live
+    assert d0.tiers[0].store.used_bytes == 400
+    assert shared.store.used_bytes == 400
+
+    # an UNshared tier keeps the exclusive-hierarchy move semantics
+    d2 = _store()
+    d2.put(_toks(1), "p", 400, kv_bytes=400.0, now=0.0, tier=2)
+    d2.fetch(d2.lookup(_toks(1), now=1.0), ready=1.0)
+    assert d2.tiers[0].store.contains(_toks(1), now=2.0)
+    assert not d2.tiers[2].store.contains(_toks(1), now=2.0)

@@ -1,0 +1,211 @@
+"""NetworkTopology, per-link estimators, routing in the event-driven
+simulator, and the shared latency-distribution metrics (ISSUE 5)."""
+import numpy as np
+import pytest
+
+from repro.serving import (
+    GBPS,
+    BandwidthTrace,
+    GoodputEstimator,
+    KVWire,
+    NetworkTopology,
+    Request,
+    SimConfig,
+    Simulator,
+    StaticPolicy,
+    WorkloadMix,
+    latency_summary,
+    route_name,
+)
+
+
+# ---------------------------------------------------------------------------
+# Goodput estimator seeding (satellite: no more hard-coded 10 Gb/s prior)
+# ---------------------------------------------------------------------------
+def test_estimator_seeds_from_link_trace():
+    """An unseeded estimator attached to a KVWire starts from the link's
+    CONFIGURED bandwidth: on a 50 Mbps wire the controller's first
+    selections must not assume a ~1600x faster network."""
+    slow = BandwidthTrace.constant(0.05 * GBPS)
+    est = GoodputEstimator()
+    KVWire(slow, est)
+    assert est.estimate == pytest.approx(0.05 * GBPS)
+
+    # an explicit initial is never overridden
+    est2 = GoodputEstimator(initial=123.0)
+    KVWire(slow, est2)
+    assert est2.estimate == 123.0
+
+    # only a completely detached estimator falls back to the legacy prior
+    assert GoodputEstimator().estimate == GoodputEstimator.DETACHED_INITIAL
+
+
+def test_estimator_seed_never_zero_for_outage_start_trace():
+    """A trace that STARTS in an outage segment (rate 0 — legal since the
+    outage fix) must not seed a 0 B/s prior: that value reaches the
+    latency model's divisions on the first controller decision.  The seed
+    falls forward to the first positive segment (or the detached prior
+    for an all-outage trace)."""
+    outage_start = BandwidthTrace.steps([(0.0, 0.0), (1.0, 1e9)])
+    est = GoodputEstimator()
+    KVWire(outage_start, est)
+    assert est.estimate == pytest.approx(1e9)
+
+    dead = BandwidthTrace.steps([(0.0, 0.0)])
+    est2 = GoodputEstimator()
+    KVWire(dead, est2)
+    assert est2.estimate == GoodputEstimator.DETACHED_INITIAL
+
+
+def test_topology_links_are_independent_and_self_seeded():
+    topo = NetworkTopology.full_mesh(
+        2, 2, BandwidthTrace.constant(1 * GBPS),
+        links={(0, 1): BandwidthTrace.constant(0.05 * GBPS)})
+    assert topo.n_links == 4
+    # per-link estimators see their own trace before any transfer
+    assert topo.estimator(0, 1).estimate == pytest.approx(0.05 * GBPS)
+    assert topo.estimator(0, 0).estimate == pytest.approx(1 * GBPS)
+    # links are distinct serialized queues: same-link sends contend,
+    # different links overlap freely
+    mb = 1_000_000
+    a1 = topo.link(0, 0).send(0.0, mb)
+    a2 = topo.link(0, 0).send(0.0, mb)
+    b1 = topo.link(1, 0).send(0.0, mb)
+    assert a1.t_wait == 0.0 and a2.t_wait == pytest.approx(a1.t_comm)
+    assert b1.t_wait == 0.0                       # different link: no queue
+    assert topo.transfers == 3
+    assert topo.bytes_moved == 3 * mb
+    assert route_name(0, 1) == "p0->d1"
+
+
+def test_topology_rejects_out_of_mesh_links():
+    with pytest.raises(ValueError):
+        NetworkTopology(1, 2, links={(1, 0): BandwidthTrace.constant(1e9)})
+
+
+# ---------------------------------------------------------------------------
+# Latency-distribution metrics (satellite: summaries beyond means)
+# ---------------------------------------------------------------------------
+def _done_req(rid, ttft, jct, slo_class="standard", t_slo=0.0,
+              violated=False):
+    r = Request(rid=rid, workload="qalike", arrival=0.0, ctx_tokens=10,
+                out_tokens=2, kv_bytes=1.0, t_slo=t_slo,
+                slo_class=slo_class)
+    r.ttft, r.done, r.slo_violated = ttft, jct, violated
+    return r
+
+
+def test_latency_summary_percentiles_and_violation_rates():
+    reqs = [_done_req(i, ttft=float(i + 1), jct=2.0 * (i + 1))
+            for i in range(100)]
+    reqs += [_done_req(100 + i, 1.0, 2.0, slo_class="interactive",
+                       t_slo=1.5, violated=(i < 3)) for i in range(10)]
+    reqs += [_done_req(110 + i, 1.0, 2.0, slo_class="batch", t_slo=9.0,
+                       violated=False) for i in range(5)]
+    s = latency_summary(reqs)
+    assert s["ttft_p50"] <= s["ttft_p95"] <= s["ttft_p99"]
+    assert s["jct_p95"] == pytest.approx(
+        np.percentile([r.jct for r in reqs], 95))
+    assert s["slo_violation_rate_interactive"] == pytest.approx(0.3)
+    assert s["slo_violation_rate_batch"] == 0.0
+    assert s["slo_violation_rate"] == pytest.approx(3 / 15)
+
+
+def test_latency_summary_empty_population():
+    assert latency_summary([]) == {}
+
+
+# ---------------------------------------------------------------------------
+# The simulator drives the same topology (large-scale sweeps)
+# ---------------------------------------------------------------------------
+def _prof():
+    from repro.core.profiles import Profile
+    from repro.core.strategy import StrategyConfig
+    return Profile(StrategyConfig(key_bits=8, value_bits=8), cr=2.0,
+                   s_enc=1e9, s_dec=1e9)
+
+
+def _topo_hetero():
+    return NetworkTopology.full_mesh(
+        2, 2, BandwidthTrace.constant(1 * GBPS),
+        links={(0, 1): BandwidthTrace.constant(0.05 * GBPS)})
+
+
+def _sim(routing, n=40):
+    reqs = WorkloadMix(rate=8.0, seed=0, q_min=0.0).generate(n)
+    return Simulator(SimConfig(n_prefill=2, n_decode=2),
+                     StaticPolicy(_prof(), "s"),
+                     BandwidthTrace.constant(1 * GBPS), reqs,
+                     topology=_topo_hetero(), routing=routing).run()
+
+
+def test_sim_topology_load_aware_beats_round_robin():
+    """On a mesh with one 50 Mbps link, round-robin keeps pushing a
+    quarter of the traffic onto the slow wire; the load-aware argmin
+    (per-link estimators + link backlog + decode queue) avoids it and
+    yields strictly lower mean JCT.  Deterministic: constant traces, no
+    faults, fixed seeds."""
+    rr = _sim("round_robin")
+    la = _sim("load_aware")
+    assert la.mean_jct() < rr.mean_jct()
+    # every request records the route that served it
+    assert all(r.route for r in la.completed())
+    # the slow link carried (much) less traffic under load-aware routing
+    slow_rr = sum(1 for r in rr.completed() if r.route == "p0->d1")
+    slow_la = sum(1 for r in la.completed() if r.route == "p0->d1")
+    assert slow_la < slow_rr
+
+
+def test_sim_topology_same_link_transfers_contend():
+    """Two simultaneous transfers routed over the SAME link queue: the
+    second books wire_wait; distinct links never queue against each
+    other."""
+    reqs = [Request(rid=i, workload="qalike", arrival=0.0, ctx_tokens=1000,
+                    out_tokens=2, kv_bytes=4e6, q_min=0.0)
+            for i in range(2)]
+    topo = NetworkTopology.full_mesh(1, 1,
+                                     BandwidthTrace.constant(1e6))
+    res = Simulator(SimConfig(n_prefill=2, n_decode=1, prefill_tok_s=1e6),
+                    StaticPolicy(_prof(), "s"),
+                    BandwidthTrace.constant(1e6), reqs,
+                    topology=NetworkTopology.full_mesh(
+                        2, 1, BandwidthTrace.constant(1e6),
+                        # both prefill nodes feed ONE decode node; give
+                        # the pair links identical traces
+                    ),
+                    routing="load_aware").run()
+    waits = sorted(r.breakdown.get("wire_wait", 0.0)
+                   for r in res.completed())
+    # both requests prefill concurrently (2 nodes) and target d0; they
+    # leave from different prefill nodes -> different links -> no queue
+    assert waits == [0.0, 0.0]
+
+    res2 = Simulator(SimConfig(n_prefill=1, n_decode=1, prefill_tok_s=1e6,
+                               decode_tok_s=1e6),
+                     StaticPolicy(_prof(), "s"),
+                     BandwidthTrace.constant(1e6),
+                     [Request(rid=i, workload="qalike", arrival=0.0,
+                              ctx_tokens=10, out_tokens=2, kv_bytes=4e6,
+                              q_min=0.0) for i in range(2)],
+                     topology=topo, routing="round_robin").run()
+    waits2 = sorted(r.breakdown.get("wire_wait", 0.0)
+                    for r in res2.completed())
+    assert waits2[0] == 0.0 and waits2[1] > 0.0
+
+
+def test_sim_topology_dimension_mismatch_rejected():
+    with pytest.raises(ValueError):
+        Simulator(SimConfig(n_prefill=4, n_decode=2),
+                  StaticPolicy(_prof(), "s"),
+                  BandwidthTrace.constant(1e9), [],
+                  topology=NetworkTopology.full_mesh(
+                      2, 2, BandwidthTrace.constant(1e9)))
+
+
+def test_sim_summary_has_tails_and_routes():
+    res = _sim("load_aware", n=20)
+    s = res.summary()
+    for k in ("mean_jct", "jct_p50", "jct_p95", "jct_p99", "ttft_p95",
+              "throughput_rps"):
+        assert k in s, k
+    assert any(k.startswith("route_") for k in s)
