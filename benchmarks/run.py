@@ -32,6 +32,8 @@ SUITES = [
     ("serving_continuous_batching", "benchmarks.continuous_batching"),
     ("serving_tiered_kv", "benchmarks.tiered_kv"),
     ("serving_cluster_scaling", "benchmarks.cluster_scaling"),
+    ("serving_sim_speed", "benchmarks.sim_speed"),
+    ("serving_trace_grid", "benchmarks.trace_grid"),
     ("kernels", "benchmarks.kernel_throughput"),
     ("roofline", "benchmarks.roofline"),
 ]

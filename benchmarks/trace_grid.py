@@ -1,0 +1,216 @@
+"""Trace-driven serving grid: scenario x routing x bandwidth (ISSUE 6).
+
+Replays production-shaped traces (:mod:`repro.workloads`) through the
+event-driven simulator over a 2x2 per-link topology and reports, per
+cell, the full tail block from :mod:`repro.serving.metrics`: p50/p95/p99
+TTFT and JCT plus per-SLO-class violation rates (explicit zero/None
+reporting for empty classes).
+
+Each scenario's trace is built ONCE per seed and replayed under every
+(routing, bandwidth) condition — a controlled comparison: the offered
+load is byte-identical across cells, only the network differs.  The
+decode-node-1 links run at 1/8th of the cell bandwidth, so "load_aware"
+vs "round_robin" is a real decision, not a tie.
+
+Determinism contract: the grid is a pure function of (seed, sizes) — no
+wall-clock values enter the JSON, floats are rounded to 6 significant
+digits.  The smoke grid is committed at ``BENCH_trace_grid.json``; CI
+regenerates it and fails when the committed copy is stale
+(``python -m benchmarks.trace_grid --check``).  Refresh with
+``python -m benchmarks.trace_grid --smoke --write``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit, write_json
+from repro.core.profiles import Profile
+from repro.core.strategy import StrategyConfig
+from repro.serving.network import GBPS, BandwidthTrace
+from repro.serving.simulator import SimConfig, StaticPolicy
+from repro.serving.topology import NetworkTopology
+from repro.workloads import TenantSpec, build_trace, default_tenants, \
+    replay_simulator
+
+BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_trace_grid.json")
+SEED = 1234
+SLOW_LINK_DIV = 8.0          # decode node 1 is behind 1/8th-rate links
+N_PREFILL, N_DECODE = 2, 2
+
+SCENARIOS: Dict[str, List[TenantSpec]] = {
+    "mixed": default_tenants(rate_scale=1.0),
+    "chat": [TenantSpec(name="chat", scenario="chat", rate=4.0,
+                        arrival="diurnal")],
+    "rag": [TenantSpec(name="rag", scenario="rag", rate=1.5)],
+    "agentic": [TenantSpec(name="agents", scenario="agentic", rate=0.8,
+                           arrival="mmpp")],
+}
+
+SMOKE_GRID = dict(scenarios=("mixed", "chat"), gbps=(40.0, 10.0, 5.0),
+                  duration=60.0)
+FULL_GRID = dict(scenarios=tuple(SCENARIOS),
+                 gbps=(100.0, 40.0, 10.0, 5.0, 2.0), duration=600.0)
+ROUTINGS = ("round_robin", "load_aware")
+
+
+def _policy() -> StaticPolicy:
+    profile = Profile(
+        strategy=StrategyConfig(quantizer="uniform", key_bits=8,
+                                value_bits=8, granularity="per_channel"),
+        cr=3.5, s_enc=60.0 * GBPS, s_dec=80.0 * GBPS, quality=0.995)
+    return StaticPolicy(profile, "static-u8")
+
+
+def _topology(gbps: float) -> NetworkTopology:
+    fast = BandwidthTrace.constant(gbps * GBPS)
+    slow = BandwidthTrace.constant(gbps * GBPS / SLOW_LINK_DIV)
+    links = {(i, 1): slow for i in range(N_PREFILL)}
+    return NetworkTopology.full_mesh(N_PREFILL, N_DECODE, fast,
+                                     links=links)
+
+
+def _round(x, sig: int = 6):
+    """Round every float to ``sig`` significant digits, recursively —
+    the committed-JSON canonicalization (robust to FMA/library noise)."""
+    if isinstance(x, dict):
+        return {k: _round(v, sig) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_round(v, sig) for v in x]
+    if isinstance(x, bool) or not isinstance(x, float):
+        return x
+    if x == 0.0 or not math.isfinite(x):
+        return x
+    return round(x, sig - 1 - int(math.floor(math.log10(abs(x)))))
+
+
+def build_grid(smoke: bool = True) -> Dict[str, object]:
+    spec = SMOKE_GRID if smoke else FULL_GRID
+    cells = []
+    for scen in spec["scenarios"]:
+        trace = build_trace(SCENARIOS[scen], duration=spec["duration"],
+                            seed=SEED)
+        for gbps in spec["gbps"]:
+            for routing in ROUTINGS:
+                res = replay_simulator(
+                    trace, _policy(),
+                    BandwidthTrace.constant(gbps * GBPS),
+                    SimConfig(scenario="pd", n_prefill=N_PREFILL,
+                              n_decode=N_DECODE, seed=SEED),
+                    topology=_topology(gbps), routing=routing)
+                cells.append({
+                    "scenario": scen, "routing": routing, "gbps": gbps,
+                    "trace_events": len(trace),
+                    "trace_digest": trace.digest(),
+                    "summary": res.summary(),
+                })
+    return _round({
+        "version": 1,
+        "smoke": bool(smoke),
+        "seed": SEED,
+        "grid_cells": len(cells),
+        "grid": cells,
+    })
+
+
+def _diff(a, b, path="") -> Optional[str]:
+    if isinstance(a, dict) and isinstance(b, dict):
+        for k in sorted(set(a) | set(b)):
+            d = _diff(a.get(k), b.get(k), f"{path}.{k}")
+            if d:
+                return d
+        return None
+    if isinstance(a, list) and isinstance(b, list):
+        if len(a) != len(b):
+            return f"{path}: length {len(a)} != {len(b)}"
+        for i, (x, y) in enumerate(zip(a, b)):
+            d = _diff(x, y, f"{path}[{i}]")
+            if d:
+                return d
+        return None
+    if a != b:
+        return f"{path}: {a!r} != {b!r}"
+    return None
+
+
+def check_against_committed(grid: Dict[str, object]) -> None:
+    """Fail loudly when the committed BENCH JSON no longer matches what
+    the current code produces (the CI staleness gate)."""
+    if not os.path.exists(BENCH_PATH):
+        raise AssertionError(
+            f"{BENCH_PATH} missing — generate it with "
+            f"`python -m benchmarks.trace_grid --smoke --write`")
+    with open(BENCH_PATH) as f:
+        committed = json.load(f)
+    d = _diff(_round(committed), grid)
+    assert d is None, (
+        f"BENCH_trace_grid.json is stale vs the current code at {d}; "
+        f"refresh with `python -m benchmarks.trace_grid --smoke --write`")
+
+
+def _emit_cells(grid: Dict[str, object]) -> None:
+    for cell in grid["grid"]:
+        s = cell["summary"]
+        emit(f"trace_grid/{cell['scenario']}/{cell['routing']}/"
+             f"{cell['gbps']}gbps", 0.0,
+             f"n={s.get('completed', 0):.0f} "
+             f"jct_p95={s.get('jct_p95', float('nan')):.4g} "
+             f"ttft_p95={s.get('ttft_p95', float('nan')):.4g} "
+             f"viol={s.get('slo_violation_rate', 0.0):.3f}")
+
+
+def run(smoke: bool = False, write: bool = False, check: bool = False,
+        json_path: str = "") -> None:
+    grid = build_grid(smoke=smoke or check)
+    _emit_cells(grid)
+    if smoke or check:
+        # Determinism within the process: a second build must be
+        # byte-identical (the replay-determinism contract, end to end).
+        again = build_grid(smoke=True)
+        d = _diff(grid, again)
+        assert d is None, f"trace grid is non-deterministic at {d}"
+        # Routing sanity on the heterogeneous mesh: load-aware must not
+        # lose to round-robin on p95 JCT in the congested mixed cell.
+        by_key = {(c["scenario"], c["routing"], c["gbps"]): c["summary"]
+                  for c in grid["grid"]}
+        scen = grid["grid"][0]["scenario"]
+        low_bw = min(c["gbps"] for c in grid["grid"])
+        la = by_key[(scen, "load_aware", low_bw)]["jct_p95"]
+        rr = by_key[(scen, "round_robin", low_bw)]["jct_p95"]
+        assert la <= rr * 1.05, (
+            f"load-aware routing lost to round-robin on the slow mesh: "
+            f"p95 JCT {la:.3f}s vs {rr:.3f}s")
+    if write:
+        with open(BENCH_PATH, "w") as f:
+            json.dump(grid, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {BENCH_PATH}")
+    elif smoke or check:
+        check_against_committed(grid)
+    if json_path:
+        write_json(json_path)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid + determinism/staleness checks")
+    ap.add_argument("--check", action="store_true",
+                    help="regenerate the smoke grid and fail if the "
+                         "committed BENCH_trace_grid.json is stale")
+    ap.add_argument("--write", action="store_true",
+                    help="refresh the committed BENCH_trace_grid.json "
+                         "(smoke grid only)")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke or args.write, write=args.write,
+        check=args.check, json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

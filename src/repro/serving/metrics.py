@@ -16,7 +16,7 @@ Requests are duck-typed: anything with ``ttft``, ``jct``, ``slo_class``,
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Sequence
+from typing import Dict, Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -34,10 +34,16 @@ def percentile_row(values: Sequence[float], prefix: str
             for p in PERCENTILES}
 
 
-def violation_rates(requests: Iterable) -> Dict[str, float]:
+def violation_rates(requests: Iterable,
+                    classes: Iterable[str] = ()) -> Dict[str, float]:
     """Per-SLO-class violation rates over requests that carry an SLO
-    (``t_slo > 0``); ``slo_violation_rate`` is the all-class aggregate."""
-    with_slo: Dict[str, list] = {}
+    (``t_slo > 0``); ``slo_violation_rate`` is the all-class aggregate.
+
+    ``classes`` forces a rate key for each named class even when no
+    completed request of that class carried an SLO — reported as 0.0
+    violations rather than silently dropped (a class that was entirely
+    shed or starved still shows up in the summary)."""
+    with_slo: Dict[str, list] = {cls: [] for cls in classes}
     for r in requests:
         if getattr(r, "t_slo", 0.0) > 0:
             with_slo.setdefault(r.slo_class, []).append(bool(r.slo_violated))
@@ -46,7 +52,8 @@ def violation_rates(requests: Iterable) -> Dict[str, float]:
     if all_flags:
         out["slo_violation_rate"] = float(np.mean(all_flags))
     for cls, flags in sorted(with_slo.items()):
-        out[f"slo_violation_rate_{cls}"] = float(np.mean(flags))
+        out[f"slo_violation_rate_{cls}"] = \
+            float(np.mean(flags)) if flags else 0.0
     return out
 
 
@@ -63,11 +70,46 @@ def route_counts(requests: Iterable) -> Dict[str, float]:
             for name, n in sorted(by_route.items())}
 
 
-def latency_summary(requests: Sequence) -> Dict[str, float]:
+def class_latency_blocks(requests: Sequence,
+                         classes: Iterable[str] = ()) -> Dict[str, object]:
+    """Per-SLO-class tail blocks: completed count plus TTFT/JCT
+    p50/p95/p99 for every class observed among ``requests`` or named in
+    ``classes``.  Edge cases are explicit, never NaN:
+
+    * 0 completed in a class -> ``completed_<cls>`` is 0.0 and every
+      percentile key is present with value ``None`` (the class is
+      reported, not dropped);
+    * 1 completed -> all three percentiles equal that request's latency.
+    """
+    by_cls: Dict[str, list] = {}
+    for r in requests:
+        by_cls.setdefault(getattr(r, "slo_class", "standard"), []).append(r)
+    out: Dict[str, object] = {}
+    for cls in sorted(set(classes) | set(by_cls)):
+        rs = by_cls.get(cls, [])
+        out[f"completed_{cls}"] = float(len(rs))
+        if rs:
+            out.update(percentile_row([r.ttft for r in rs], f"ttft_{cls}"))
+            out.update(percentile_row([r.jct for r in rs], f"jct_{cls}"))
+        else:
+            for p in PERCENTILES:
+                out[f"ttft_{cls}_p{p}"] = None
+                out[f"jct_{cls}_p{p}"] = None
+    return out
+
+
+def latency_summary(requests: Sequence,
+                    classes: Optional[Iterable[str]] = None
+                    ) -> Dict[str, float]:
     """The shared distribution block: TTFT/JCT p50/p95/p99 plus per-class
-    violation rates."""
+    violation rates.  Pass ``classes`` (the SLO classes the run was
+    *supposed* to serve) to additionally emit per-class tail blocks with
+    explicit zero/None reporting for empty classes — see
+    :func:`class_latency_blocks`."""
     out: Dict[str, float] = {}
     out.update(percentile_row([r.ttft for r in requests], "ttft"))
     out.update(percentile_row([r.jct for r in requests], "jct"))
-    out.update(violation_rates(requests))
+    out.update(violation_rates(requests, classes or ()))
+    if classes is not None:
+        out.update(class_latency_blocks(requests, classes))
     return out

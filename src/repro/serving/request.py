@@ -17,7 +17,7 @@ LIFECYCLE = ("waiting", "prefilling", "transferring", "decoding", "done",
              "rejected")
 
 
-@dataclass
+@dataclass(slots=True)
 class Request:
     rid: int
     workload: str            # router-provided label w (Sec. 2.2)

@@ -17,6 +17,7 @@ offline→online drift the residual bandit corrects.
 """
 from __future__ import annotations
 
+import gc
 import heapq
 import math
 from dataclasses import dataclass, field
@@ -43,17 +44,25 @@ from repro.serving.topology import NetworkTopology
 # ---------------------------------------------------------------------------
 class Policy:
     name = "base"
+    # Whether ``choose``/``feedback`` read the ServiceContext.  Policies
+    # that ignore it (fixed-profile baselines) set this False so the hot
+    # path can skip building a context per request — at a million requests
+    # the allocation alone dominates the simulated cluster.  ``choose``
+    # then receives ``ctx=None``.
+    needs_ctx = True
 
-    def choose(self, req: Request, ctx: ServiceContext) -> Tuple[Profile, Optional[Decision]]:
+    def choose(self, req: Request, ctx: Optional[ServiceContext]
+               ) -> Tuple[Profile, Optional[Decision]]:
         raise NotImplementedError
 
-    def feedback(self, ctx: ServiceContext, decision: Optional[Decision],
-                 observed: float) -> None:
+    def feedback(self, ctx: Optional[ServiceContext],
+                 decision: Optional[Decision], observed: float) -> None:
         pass
 
 
 class NoCompressionPolicy(Policy):
     name = "default"
+    needs_ctx = False
 
     def choose(self, req, ctx):
         return IDENTITY_PROFILE, None
@@ -67,8 +76,10 @@ class StaticPolicy(Policy):
         self.profile = profile
         self.name = name
         # CacheGen's behaviour in Fig. 14: fall back to recomputation when
-        # it cannot meet the target SLO.
+        # it cannot meet the target SLO.  Only that fallback reads the
+        # service context (predicted_latency needs B and V).
         self.slo_fallback_recompute = slo_fallback_recompute
+        self.needs_ctx = slo_fallback_recompute
 
     def choose(self, req, ctx):
         return self.profile, None
@@ -94,41 +105,78 @@ class KVServePolicy(Policy):
 # ---------------------------------------------------------------------------
 @dataclass
 class NodePool:
+    """Idle-node tracker with O(log n) acquire/release.
+
+    ``node_free`` is authoritative: per-node free time, ``None`` while the
+    node is acquired.  ``heap`` carries (free_time, nid) reservations with
+    LAZY deletion — an entry is valid only while it still matches
+    ``node_free[nid]``; stale entries (from ``acquire_node`` pulls or
+    superseded releases) are skipped on pop.  The previous implementation
+    re-``heapify``-ed the whole heap on every routed acquire, which was
+    the simulator's top hot spot on million-request traces.
+    """
+
     n: int
-    speed: np.ndarray           # persistent per-node speed factor
-    free_at: List[Tuple[float, int]] = field(default_factory=list)
+    speed: List[float]          # persistent per-node speed factor
+    node_free: List[Optional[float]] = field(default_factory=list)
+    heap: List[Tuple[float, int]] = field(default_factory=list)
 
     @staticmethod
     def make(n: int, straggler_sigma: float, rng: np.random.Generator
              ) -> "NodePool":
         speed = np.exp(rng.normal(0.0, straggler_sigma, size=n))
-        speed = np.minimum(speed, 1.0)  # stragglers only slow down
+        # Stragglers only slow down; plain floats keep every downstream
+        # duration off numpy scalar arithmetic.
+        speed = np.minimum(speed, 1.0).tolist()
         pool = NodePool(n=n, speed=speed)
-        pool.free_at = [(0.0, i) for i in range(n)]
-        heapq.heapify(pool.free_at)
+        pool.node_free = [0.0] * n
+        pool.heap = [(0.0, i) for i in range(n)]  # already heap-ordered
         return pool
 
     def acquire(self, now: float) -> Tuple[float, int]:
-        free, nid = heapq.heappop(self.free_at)
-        return max(free, now), nid
+        """Earliest-free node: pops (skipping stale entries) and marks it
+        acquired.  Ties break by node id, matching the old heap order."""
+        heap = self.heap
+        node_free = self.node_free
+        while True:
+            free, nid = heapq.heappop(heap)
+            if node_free[nid] == free:
+                node_free[nid] = None
+                return (free if free > now else now), nid
 
     def acquire_node(self, nid: int, now: float) -> float:
         """Reserve a SPECIFIC node (the topology-routed decode target):
         returns its start time (>= now, after the node frees up)."""
-        for k, (free, n) in enumerate(self.free_at):
-            if n == nid:
-                self.free_at[k] = self.free_at[-1]
-                self.free_at.pop()
-                heapq.heapify(self.free_at)
-                return max(free, now)
-        raise KeyError(f"node {nid} is not idle-tracked")
+        free = self.node_free[nid]
+        if free is None:
+            raise KeyError(f"node {nid} is not idle-tracked")
+        self.node_free[nid] = None  # its heap entry goes stale in place
+        return free if free > now else now
 
     def free_times(self) -> Dict[int, float]:
         """Current per-node free times (the router's decode queue view)."""
-        return {nid: free for free, nid in self.free_at}
+        return {nid: free for nid, free in enumerate(self.node_free)
+                if free is not None}
+
+    def next_free(self) -> Optional[float]:
+        """Earliest free time among idle-tracked nodes (dispatch clock)."""
+        best: Optional[float] = None
+        for free in self.node_free:
+            if free is not None and (best is None or free < best):
+                best = free
+        return best
 
     def release(self, nid: int, until: float) -> None:
-        heapq.heappush(self.free_at, (until, nid))
+        self.node_free[nid] = until
+        heap = self.heap
+        heapq.heappush(heap, (until, nid))
+        if len(heap) > 2 * self.n + 32:
+            # Routed (acquire_node) traffic never pops, so stale entries
+            # accumulate; compact before the heap outgrows the pool.
+            live = [(free, nid) for nid, free in enumerate(self.node_free)
+                    if free is not None]
+            heapq.heapify(live)
+            self.heap = live
 
 
 @dataclass
@@ -168,13 +216,17 @@ class SimResult:
         return np.asarray([r.ttft for r in self.completed()])
 
     def mean_jct(self) -> float:
-        return float(self.jct().mean())
+        """0.0 when nothing completed (never NaN, never a crash)."""
+        vals = self.jct()
+        return float(vals.mean()) if vals.size else 0.0
 
     def p95_jct(self) -> float:
-        return float(np.percentile(self.jct(), 95))
+        vals = self.jct()
+        return float(np.percentile(vals, 95)) if vals.size else 0.0
 
     def mean_ttft(self) -> float:
-        return float(self.ttft().mean())
+        vals = self.ttft()
+        return float(vals.mean()) if vals.size else 0.0
 
     def slo_attainment(self) -> float:
         with_slo = [r for r in self.requests if r.t_slo > 0]
@@ -210,7 +262,11 @@ class SimResult:
             makespan = max(r.done for r in done)
             out["throughput_rps"] = (len(done) / makespan
                                      if makespan > 0 else 0.0)
-        out.update(latency_summary(done))
+        # Per-class blocks cover every class SUBMITTED (not just the
+        # completed ones): a class whose requests were all shed still
+        # appears — completed 0, percentiles None, violation rate 0.
+        classes = sorted({r.slo_class for r in self.requests})
+        out.update(latency_summary(done, classes=classes))
         out.update(route_counts(done))
         return out
 
@@ -285,9 +341,17 @@ class Simulator:
         self.routing = routing
         self._rr_next = 0
         self.rng = np.random.default_rng(config.seed)
+        # Hot-path caches: profile -> display name (short_name() rebuilds
+        # its string per call), the scenario's default SLO metric, and
+        # whether the pool path needs the CacheGen-style SLO fallback.
+        self._names: Dict[int, Tuple[Profile, str]] = {}
+        self._default_metric = "jct" if config.scenario == "pd" else "ttft"
+        self._static_fallback = (isinstance(policy, StaticPolicy)
+                                 and policy.slo_fallback_recompute)
         self.estimator = GoodputEstimator(alpha=config.estimator_alpha,
                                           initial=seed_bandwidth(trace))
-        if isinstance(store, TieredKVStore):
+        self._tiered = isinstance(store, TieredKVStore)
+        if self._tiered:
             if store.estimator is None:
                 store.estimator = self.estimator
             if store.recompress is None:
@@ -363,15 +427,144 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
-        if self.scheduler_cfg is not None:
-            self._run_scheduled()
-            return SimResult(self.requests, self.policy.name)
-        for req in self.requests:
+        # The replay loop allocates millions of small ACYCLIC objects
+        # (per-request breakdown dicts, heap tuples) that all stay
+        # reachable from self.requests, so generational GC finds nothing
+        # yet rescans the growing heap over and over — ~4x the entire
+        # replay cost at a million requests.  Defer collection for the
+        # duration; re-enable (and let the caller's thresholds catch up)
+        # on the way out.
+        was_enabled = gc.isenabled()
+        if was_enabled:
+            gc.disable()
+        try:
+            if self.scheduler_cfg is not None:
+                self._run_scheduled()
+                return SimResult(self.requests, self.policy.name)
             if self.cfg.scenario == "pd":
-                self._run_pd(req)
+                if self._fast_pd_eligible():
+                    self._run_fast_pd()
+                else:
+                    for req in self.requests:
+                        self._run_pd(req)
             else:
-                self._run_pool(req)
-        return SimResult(self.requests, self.policy.name)
+                for req in self.requests:
+                    self._run_pool(req)
+            return SimResult(self.requests, self.policy.name)
+        finally:
+            if was_enabled:
+                gc.enable()
+
+    # ------------------------------------------------------------------
+    # Bulk pd replay (the million-request hot path)
+    # ------------------------------------------------------------------
+    def _fast_pd_eligible(self) -> bool:
+        """The inlined pd loop applies when per-request dispatch has no
+        data-dependent branching to honor: no per-link topology, no fault
+        injection (those draw from the rng mid-request), and a
+        fixed-profile policy that ignores the service context.  Every
+        other configuration takes the general per-request path."""
+        cfg = self.cfg
+        policy = self.policy
+        return (self.topology is None
+                and cfg.fail_rate <= 0
+                and cfg.transient_slow_p <= 0
+                and not policy.needs_ctx
+                and type(policy).choose in (StaticPolicy.choose,
+                                            NoCompressionPolicy.choose)
+                and type(policy).feedback is Policy.feedback)
+
+    def _run_fast_pd(self) -> None:
+        """Inlined twin of :meth:`_run_pd` for the eligible configuration.
+        Every float expression mirrors the general path op-for-op, so the
+        two produce bit-identical requests (the sim_speed benchmark
+        asserts it); what is removed is per-request call and allocation
+        overhead — ServiceContext construction, pool/transfer/estimator
+        method dispatch, dict re-writes — which dominated replay time on
+        million-request traces."""
+        requests = self.requests
+        if not requests:
+            return
+        cfg = self.cfg
+        profile, _ = self.policy.choose(requests[0], None)
+        name = self._profile_name(profile)
+        pre_tok = cfg.prefill_tok_s
+        dec_tok = cfg.decode_tok_s
+        s_enc, s_dec, cr = profile.s_enc, profile.s_dec, profile.cr
+        enc_inf = s_enc == float("inf")
+        dec_inf = s_dec == float("inf")
+        trace = self.trace
+        const = (trace.jitter <= 0 and len(trace.times) == 1
+                 and trace.values[0] > 0.0)
+        rate = trace.values[0] if const else 0.0
+        est = self.estimator
+        alpha = est.alpha
+        one_m_alpha = 1 - alpha
+        e = est._est
+        prefill, decode = self.prefill, self.decode
+        pheap, dheap = prefill.heap, decode.heap
+        pspeed, dspeed = prefill.speed, decode.speed
+        heappush, heappop = heapq.heappush, heapq.heappop
+        isfinite = math.isfinite
+        default_metric = self._default_metric
+
+        for req in requests:
+            arrival = req.arrival
+            # prefill on the earliest-free node (no stale heap entries
+            # without acquire_node traffic)
+            free, nid = heappop(pheap)
+            s0 = free if free > arrival else arrival
+            t = s0 + (req.ctx_tokens / pre_tok) / pspeed[nid]
+            heappush(pheap, (t, nid))
+            q_wait = s0 - arrival
+
+            # compress -> transfer -> decompress
+            v = req.kv_bytes
+            t_c = 0.0 if enc_inf else v / s_enc
+            payload = v / cr
+            t_comm = payload / rate if const \
+                else trace.transfer_time(t + t_c, payload)
+            if t_comm > 0 and payload > 0 and isfinite(t_comm):
+                goodput = payload / t_comm
+                e = goodput if e is None \
+                    else one_m_alpha * e + alpha * goodput
+            t_d = 0.0 if dec_inf else v / s_dec
+            bd_prefill = t - arrival - q_wait - 0.0
+            t = t + t_c + t_comm + t_d
+            ttft = t - arrival
+            req.ttft = ttft
+
+            # decode on the earliest-free node
+            t_dec_base = req.out_tokens / dec_tok
+            free2, nid2 = heappop(dheap)
+            s1 = free2 if free2 > t else t
+            t_end = s1 + t_dec_base / dspeed[nid2]
+            heappush(dheap, (t_end, nid2))
+
+            # mirror the general path op-for-op: q_wait2 accumulates from
+            # 0.0, decode is ACTUAL elapsed minus queue (straggler-aware),
+            # retry delta is identically 0.0 here (no faults when eligible)
+            q2 = 0.0 + (s1 - t)
+            req.breakdown = {
+                "prefill": bd_prefill,
+                "queue": (q_wait + 0.0) + q2,
+                "compress": t_c, "comm": t_comm, "decompress": t_d,
+                "decode": t_end - t - q2 - 0.0,
+            }
+            req.done = t_end
+            req.chosen = name
+            metric = req.slo_metric
+            if metric is None:
+                metric = default_metric
+            observed = ttft if metric == "ttft" else t_end - arrival
+            t_slo = req.t_slo
+            req.slo_violated = t_slo > 0 and observed > t_slo
+
+        est._est = e
+        for free, nid in pheap:
+            prefill.node_free[nid] = free
+        for free, nid in dheap:
+            decode.node_free[nid] = free
 
     def _run_scheduled(self) -> None:
         """Dispatch through the shared ContinuousScheduler: admission
@@ -398,15 +591,26 @@ class Simulator:
                 self._run_pd(req, start)
             else:
                 self._run_pool(req, start)
-            if self.prefill.free_at:
-                now = max(now, self.prefill.free_at[0][0])
+            nxt = self.prefill.next_free()
+            if nxt is not None:
+                now = max(now, nxt)
 
     # ------------------------------------------------------------------
     def _slo_metric(self, req: Request) -> str:
         """Scenario default (pd -> jct, pool -> ttft) unless the request
         pins one — the same resolution rule as the real runtime."""
-        return req.resolved_slo_metric(
-            "jct" if self.cfg.scenario == "pd" else "ttft")
+        m = req.slo_metric
+        return m if m is not None else self._default_metric
+
+    def _profile_name(self, profile: Profile) -> str:
+        # Keyed by id with the profile pinned in the entry, so a recycled
+        # id (GC'd temporary) can never alias onto a stale name.
+        hit = self._names.get(id(profile))
+        if hit is not None and hit[0] is profile:
+            return hit[1]
+        name = profile.strategy.short_name()
+        self._names[id(profile)] = (profile, name)
+        return name
 
     def _service_context(self, req: Request, t_model: float) -> ServiceContext:
         return ServiceContext(
@@ -450,9 +654,10 @@ class Simulator:
         start = req.arrival if start is None else start
         t_prefill_base = req.ctx_tokens / cfg.prefill_tok_s
         t_decode_base = req.out_tokens / cfg.decode_tok_s
-        ctx = self._service_context(req, t_prefill_base + t_decode_base)
+        ctx = self._service_context(req, t_prefill_base + t_decode_base) \
+            if self.policy.needs_ctx else None
         profile, decision = self.policy.choose(req, ctx)
-        req.chosen = profile.strategy.short_name()
+        req.chosen = self._profile_name(profile)
 
         # prefill
         t, q_wait, pid = self._run_on_pool(self.prefill, start,
@@ -473,9 +678,14 @@ class Simulator:
         t = t + t_c + t_comm + t_d
         req.ttft = t - req.arrival  # first decode token comes right after
 
-        # decode
+        # decode — billed at ACTUAL elapsed time (straggler/transient
+        # slowdowns included), not the base estimate, so the breakdown
+        # terms always sum to JCT
+        retry0 = req.breakdown.get("retry", 0.0)
+        t_dec = t
         t, q_wait2, _ = self._run_on_pool(self.decode, t, t_decode_base, req)
-        req.breakdown["decode"] = t_decode_base
+        req.breakdown["decode"] = t - t_dec - q_wait2 \
+            - (req.breakdown.get("retry", 0.0) - retry0)
         req.breakdown["queue"] += q_wait2
         req.done = t
         # Metric-matched feedback (same rule as the runtime's _finish):
@@ -514,13 +724,16 @@ class Simulator:
         dst = self._choose_decode(src, t, req.kv_bytes)
         link = self.topology.link(src, dst)
         req.route = route_name(src, dst)
-        ctx = ServiceContext(
-            workload=req.workload, bandwidth=link.estimator.estimate,
-            t_slo=req.t_slo, q_min=req.q_min,
-            t_model=t_prefill_base + t_decode_base, kv_bytes=req.kv_bytes,
-            slo_metric=self._slo_metric(req), route=req.route)
+        ctx = None
+        if self.policy.needs_ctx:
+            ctx = ServiceContext(
+                workload=req.workload, bandwidth=link.estimator.estimate,
+                t_slo=req.t_slo, q_min=req.q_min,
+                t_model=t_prefill_base + t_decode_base,
+                kv_bytes=req.kv_bytes,
+                slo_metric=self._slo_metric(req), route=req.route)
         profile, decision = self.policy.choose(req, ctx)
-        req.chosen = profile.strategy.short_name()
+        req.chosen = self._profile_name(profile)
 
         # compress -> per-link serialized transfer -> decompress
         v = req.kv_bytes
@@ -535,10 +748,13 @@ class Simulator:
         t = t + t_c + tr.t_wait + tr.t_comm + t_d
         req.ttft = t - req.arrival  # first decode token comes right after
 
-        # decode, pinned on the routed node
+        # decode, pinned on the routed node — billed at ACTUAL elapsed
+        # time (stragglers/retries included) so breakdowns sum to JCT
+        retry0 = req.breakdown.get("retry", 0.0)
         t_end, q_wait2 = self._run_on_node(self.decode, dst, t,
                                            t_decode_base, req)
-        req.breakdown["decode"] = t_decode_base
+        req.breakdown["decode"] = t_end - t - q_wait2 \
+            - (req.breakdown.get("retry", 0.0) - retry0)
         req.breakdown["queue"] += q_wait2
         req.done = t_end
         metric = self._slo_metric(req)
@@ -561,13 +777,14 @@ class Simulator:
         start = req.arrival if start is None else start
         sched_wait = start - req.arrival
         t_prefill_base = req.ctx_tokens / cfg.prefill_tok_s
-        ctx = self._service_context(req, cfg.pool_fetch_overhead)
+        ctx = self._service_context(req, cfg.pool_fetch_overhead) \
+            if self.policy.needs_ctx else None
         profile, decision = self.policy.choose(req, ctx)
-        req.chosen = profile.strategy.short_name()
+        req.chosen = self._profile_name(profile)
 
         entry = None
         hit = None      # TierHit when the store is a TieredKVStore
-        tiered = isinstance(self.store, TieredKVStore)
+        tiered = self._tiered
         if self.store is not None:
             key = req.prefix_key if req.prefix_key is not None else (req.rid,)
             if tiered:
@@ -578,8 +795,7 @@ class Simulator:
             recompute = entry is None
         else:
             recompute = not req.prefix_hit
-        if not recompute and isinstance(self.policy, StaticPolicy) \
-                and self.policy.slo_fallback_recompute and req.t_slo > 0:
+        if not recompute and self._static_fallback and req.t_slo > 0:
             # CacheGen-style: if the static profile cannot meet SLO, degrade
             # to full recomputation (Fig. 14).
             pred = predicted_latency(profile, ctx)
@@ -628,7 +844,7 @@ class Simulator:
             v = entry.kv_bytes
             payload = float(entry.wire_bytes)
             t_d = 0.0 if stored.s_dec == float("inf") else v / stored.s_dec
-            req.chosen = stored.strategy.short_name()
+            req.chosen = self._profile_name(stored)
         else:
             v = req.kv_bytes
             payload = v / profile.cr

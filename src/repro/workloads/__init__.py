@@ -1,0 +1,50 @@
+"""Trace-driven workload harness (DESIGN.md §11).
+
+Schema (:mod:`.trace`), arrival processes (:mod:`.arrivals`), scenario
+archetypes + tenant composition (:mod:`.scenarios`), and replay adapters
+into both serving backends (:mod:`.replay`).  Everything here is
+numpy-only — importable without the jax model stack — so million-event
+traces can be generated and simulated anywhere.
+"""
+from repro.workloads.arrivals import (
+    ARRIVALS,
+    ArrivalProcess,
+    DiurnalGammaPoisson,
+    OnOffMMPP,
+    Poisson,
+    make_arrivals,
+)
+from repro.workloads.replay import (
+    DEFAULT_GEOM,
+    ModelGeom,
+    replay_runtime,
+    replay_simulator,
+    trace_requests,
+)
+from repro.workloads.scenarios import (
+    ARCHETYPES,
+    ScenarioSpec,
+    TenantSpec,
+    build_tenant_trace,
+    build_trace,
+    default_tenants,
+    generate_events,
+    scaled_trace,
+)
+from repro.workloads.trace import (
+    SLO_METRICS,
+    Trace,
+    TraceEvent,
+    iter_chunks,
+    validate,
+)
+
+__all__ = [
+    "ARRIVALS", "ArrivalProcess", "DiurnalGammaPoisson", "OnOffMMPP",
+    "Poisson", "make_arrivals",
+    "DEFAULT_GEOM", "ModelGeom", "replay_runtime", "replay_simulator",
+    "trace_requests",
+    "ARCHETYPES", "ScenarioSpec", "TenantSpec", "build_tenant_trace",
+    "build_trace", "default_tenants", "generate_events", "scaled_trace",
+    "SLO_METRICS", "Trace", "TraceEvent", "iter_chunks", "validate",
+]

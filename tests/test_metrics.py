@@ -1,0 +1,108 @@
+"""Regression tests for latency-summary edge cases (ISSUE 6).
+
+A grid sweep routinely produces cells where an SLO class has zero or one
+completed request (everything shed, or a single straggler).  The summary
+must stay total: no crash, no NaN, no RuntimeWarning — empty classes are
+reported explicitly (completed 0, percentiles None, violation rate 0.0)
+rather than silently dropped.
+"""
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+import pytest
+
+from repro.serving.metrics import (
+    class_latency_blocks,
+    latency_summary,
+    percentile_row,
+    violation_rates,
+)
+from repro.serving.simulator import SimResult
+
+
+@dataclass
+class _Req:
+    ttft: float = 0.5
+    jct: float = 1.0
+    slo_class: str = "standard"
+    t_slo: float = 2.0
+    slo_violated: bool = False
+    chosen: str = "u8"
+    done: float = 1.0
+    route: str = ""
+    breakdown: Dict[str, float] = field(default_factory=dict)
+
+
+def _no_warnings(fn, *args, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        return fn(*args, **kw)
+
+
+def test_percentile_row_empty_returns_no_keys():
+    assert _no_warnings(percentile_row, [], "ttft") == {}
+
+
+def test_percentile_row_single_value():
+    row = _no_warnings(percentile_row, [0.7], "jct")
+    assert row == {"jct_p50": 0.7, "jct_p95": 0.7, "jct_p99": 0.7}
+
+
+def test_violation_rates_forces_named_classes():
+    reqs = [_Req(slo_class="interactive", slo_violated=True)]
+    out = _no_warnings(violation_rates, reqs,
+                       classes=("interactive", "batch"))
+    assert out["slo_violation_rate"] == 1.0
+    assert out["slo_violation_rate_interactive"] == 1.0
+    assert out["slo_violation_rate_batch"] == 0.0    # empty, not absent
+
+
+def test_violation_rates_no_slo_population():
+    out = _no_warnings(violation_rates, [_Req(t_slo=0.0)], classes=())
+    assert "slo_violation_rate" not in out    # nothing carried an SLO
+
+
+def test_class_blocks_zero_and_one_completed():
+    reqs = [_Req(slo_class="interactive", ttft=0.3, jct=0.9)]
+    out = _no_warnings(class_latency_blocks, reqs,
+                       classes=("interactive", "batch"))
+    assert out["completed_interactive"] == 1.0
+    for p in (50, 95, 99):        # one sample: every percentile equals it
+        assert out[f"ttft_interactive_p{p}"] == 0.3
+        assert out[f"jct_interactive_p{p}"] == 0.9
+    assert out["completed_batch"] == 0.0
+    for p in (50, 95, 99):        # reported as None, never NaN or absent
+        assert out[f"ttft_batch_p{p}"] is None
+        assert out[f"jct_batch_p{p}"] is None
+
+
+def test_latency_summary_without_classes_is_backwards_compatible():
+    out = _no_warnings(latency_summary, [_Req()])
+    assert out["ttft_p50"] == 0.5 and out["jct_p99"] == 1.0
+    assert not any(k.startswith("completed_") for k in out)
+
+
+def test_sim_result_empty_population():
+    res = SimResult(requests=[], policy="u8")
+    assert _no_warnings(res.mean_jct) == 0.0
+    assert _no_warnings(res.p95_jct) == 0.0
+    assert _no_warnings(res.mean_ttft) == 0.0
+    s = _no_warnings(res.summary)
+    assert s["completed"] == 0.0 and s["rejected"] == 0.0
+    assert all(not (isinstance(v, float) and np.isnan(v))
+               for v in s.values())
+
+
+def test_sim_result_summary_reports_fully_shed_class():
+    done = _Req(slo_class="interactive", ttft=0.3, jct=0.9)
+    shed = _Req(slo_class="batch", chosen="rejected", ttft=0.0, jct=0.0)
+    s = _no_warnings(SimResult(requests=[done, shed], policy="u8").summary)
+    assert s["completed"] == 1.0 and s["rejected"] == 1.0
+    assert s["completed_batch"] == 0.0
+    assert s["ttft_batch_p50"] is None and s["jct_batch_p99"] is None
+    assert s["slo_violation_rate_batch"] == 0.0
+    assert s["ttft_interactive_p50"] == 0.3
+    assert all(not (isinstance(v, float) and np.isnan(v))
+               for v in s.values())

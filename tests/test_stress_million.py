@@ -1,0 +1,48 @@
+"""Million-request trace replay (ISSUE 6 stress path).
+
+Opt-in (`pytest -m stress`; excluded from the default run by
+``addopts``): builds a ~1M-event production trace and replays it through
+the simulator's fast PD path, checking the properties that matter at
+scale — full completion, the breakdown accounting identity on a sample,
+and an events/s floor that would catch a hot-path regression the small
+suite can't see.
+"""
+import time
+
+import pytest
+
+from repro.core.profiles import Profile
+from repro.core.strategy import StrategyConfig
+from repro.serving import BandwidthTrace, GBPS
+from repro.serving.simulator import SimConfig, Simulator, StaticPolicy
+from repro.workloads import scaled_trace, trace_requests
+
+N_EVENTS = 1_000_000
+MIN_EVENTS_PER_S = 500_000       # optimized path runs ~2.7M+/s on 1 CPU
+EVENTS_PER_REQUEST = 5           # arrival/prefill/transfer/decode/complete
+
+
+@pytest.mark.stress
+def test_million_request_replay_completes_fast():
+    trace = scaled_trace(N_EVENTS, seed=0)
+    assert 0.5 * N_EVENTS <= len(trace) <= 2.0 * N_EVENTS
+    policy = StaticPolicy(
+        Profile(StrategyConfig(quantizer="uniform", key_bits=8,
+                               value_bits=8, granularity="per_channel"),
+                cr=3.5, s_enc=60.0 * GBPS, s_dec=80.0 * GBPS), "u8")
+    sim = Simulator(SimConfig(scenario="pd", n_prefill=4, n_decode=2,
+                              straggler_sigma=0.1, seed=0),
+                    policy, BandwidthTrace.constant(10 * GBPS),
+                    trace_requests(trace))
+    assert sim._fast_pd_eligible()
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    done = res.completed()
+    assert len(done) == len(trace)
+    eps = len(done) * EVENTS_PER_REQUEST / wall
+    assert eps >= MIN_EVENTS_PER_S, \
+        f"{eps:,.0f} events/s < {MIN_EVENTS_PER_S:,} floor ({wall:.1f}s)"
+    for r in done[:: max(len(done) // 1000, 1)]:     # ~1k sample
+        assert abs(sum(r.breakdown.values()) - r.jct) < 1e-6
+        assert 0 < r.ttft <= r.jct + 1e-12

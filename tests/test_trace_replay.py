@@ -1,0 +1,150 @@
+"""Trace replay invariants across both serving backends (ISSUE 6).
+
+* Simulator replay (topology mode, both routing policies): per-request
+  breakdowns sum exactly to JCT, ``wire_wait`` is accounted, and every
+  request carries its stamped route.
+* The inlined fast PD path must be bit-identical to the general event
+  loop — same breakdowns, same outcomes, same estimator state.
+* Cluster replay (real-execution N x M ClusterRuntime over a bursty
+  trace): the breakdown-sum == JCT property extends to the runtime,
+  ``wire_wait``/``stall`` included, routes stamped.
+"""
+import numpy as np
+import pytest
+
+from repro.core.profiles import Profile
+from repro.core.strategy import StrategyConfig
+from repro.serving import BandwidthTrace, GBPS, NetworkTopology, \
+    SchedulerConfig
+from repro.serving.simulator import SimConfig, Simulator, StaticPolicy
+from repro.workloads import TenantSpec, build_trace, replay_runtime, \
+    replay_simulator, trace_requests
+
+BREAKDOWN_ABS = 1e-9
+
+
+def _profile(cr=3.5):
+    return Profile(StrategyConfig(quantizer="uniform", key_bits=8,
+                                  value_bits=8, granularity="per_channel"),
+                   cr=cr, s_enc=60.0 * GBPS, s_dec=80.0 * GBPS,
+                   quality=0.995)
+
+
+def _bursty_trace(duration=25.0, seed=42):
+    """Mixed diurnal + on-off traffic: bursts guarantee queueing and
+    wire contention, so the properties are checked under load."""
+    tenants = [
+        TenantSpec("chat", "chat", 3.0, "diurnal", {"amplitude": 0.7}),
+        TenantSpec("agents", "agentic", 0.8, "mmpp",
+                   {"mean_on": 3.0, "mean_off": 6.0}),
+    ]
+    return build_trace(tenants, duration=duration, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Simulator replay over a per-link topology
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("routing", ["round_robin", "load_aware"])
+def test_sim_replay_breakdowns_sum_to_jct(routing):
+    trace = _bursty_trace()
+    topo = NetworkTopology.full_mesh(
+        2, 2, BandwidthTrace.constant(2 * GBPS),
+        links={(0, 1): BandwidthTrace.constant(0.5 * GBPS)})
+    res = replay_simulator(
+        trace, StaticPolicy(_profile(), "u8"),
+        BandwidthTrace.constant(2 * GBPS),
+        SimConfig(scenario="pd", n_prefill=2, n_decode=2, seed=0),
+        topology=topo, routing=routing)
+    done = res.completed()
+    assert len(done) == len(trace)
+    assert any(r.breakdown.get("wire_wait", 0.0) > 0 for r in done), \
+        "bursty trace should contend on at least one link"
+    for r in done:
+        assert sum(r.breakdown.values()) == pytest.approx(
+            r.jct, abs=BREAKDOWN_ABS), (r.rid, r.breakdown, r.jct)
+        assert 0 < r.ttft <= r.jct + 1e-12
+        assert "wire_wait" in r.breakdown
+        assert r.route and r.route.startswith("p") and "->d" in r.route
+        assert all(v >= -1e-12 for v in r.breakdown.values()), r.breakdown
+
+
+def test_sim_replay_flat_breakdowns_sum_to_jct():
+    """Same property on the flat (no-topology) PD path, which dispatches
+    through the inlined fast loop for static policies."""
+    trace = _bursty_trace()
+    res = replay_simulator(
+        trace, StaticPolicy(_profile(), "u8"),
+        BandwidthTrace.constant(2 * GBPS),
+        SimConfig(scenario="pd", n_prefill=2, n_decode=2, seed=0))
+    done = res.completed()
+    assert len(done) == len(trace)
+    for r in done:
+        assert sum(r.breakdown.values()) == pytest.approx(
+            r.jct, abs=BREAKDOWN_ABS), (r.rid, r.breakdown, r.jct)
+        assert 0 < r.ttft <= r.jct + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Fast PD path == general event loop, bit for bit
+# ---------------------------------------------------------------------------
+def test_fast_pd_path_is_bit_identical_to_general_loop():
+    trace = _bursty_trace(duration=40.0, seed=9)
+    cfg = SimConfig(scenario="pd", n_prefill=3, n_decode=2,
+                    straggler_sigma=0.15, seed=0)
+    bw = BandwidthTrace.steps([(0.0, 2 * GBPS), (10.0, 0.6 * GBPS),
+                               (20.0, 4 * GBPS)])
+
+    fast_pol = StaticPolicy(_profile(), "u8")
+    sim_fast = Simulator(cfg, fast_pol, bw, trace_requests(trace))
+    assert sim_fast._fast_pd_eligible()
+    res_fast = sim_fast.run()
+
+    slow_pol = StaticPolicy(_profile(), "u8")
+    slow_pol.needs_ctx = True          # forces the general event loop
+    sim_slow = Simulator(cfg, slow_pol, bw, trace_requests(trace))
+    assert not sim_slow._fast_pd_eligible()
+    res_slow = sim_slow.run()
+
+    for a, b in zip(res_fast.requests, res_slow.requests):
+        assert a.rid == b.rid
+        assert a.done == b.done, a.rid
+        assert a.ttft == b.ttft, a.rid
+        assert a.chosen == b.chosen
+        assert a.slo_violated == b.slo_violated
+        assert a.breakdown == b.breakdown, a.rid
+    assert sim_fast.estimator._est == sim_slow.estimator._est
+    assert res_fast.summary() == res_slow.summary()
+
+
+# ---------------------------------------------------------------------------
+# Real-execution cluster replay
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["pd", "pool"])
+def test_cluster_replay_breakdowns_sum_to_jct(reference_model, mode):
+    """Replaying a bursty trace through a 2x2 ClusterRuntime preserves
+    the breakdown accounting identity per completed request, with
+    ``wire_wait``/``stall`` terms included and routes stamped."""
+    from repro.serving.cluster import ClusterRuntime
+    from repro.serving.engine import RuntimeConfig
+
+    rt = ClusterRuntime(
+        static_profile=_profile(cr=2.0),
+        config=RuntimeConfig(seq=48, decode_tokens=4, prefill_tok_s=2000.0,
+                             decode_tok_s=500.0, mode=mode),
+        trace=BandwidthTrace.constant(0.5 * GBPS),
+        scheduler=SchedulerConfig(max_slots=4, max_prefills_per_step=2,
+                                  max_queue=64),
+        n_prefill=2, n_decode=2)
+    rt.model_cfg, rt.params = reference_model
+    trace = _bursty_trace(duration=4.0, seed=21)
+    assert 6 <= len(trace) <= 64      # bursty but runtime-sized
+    done = replay_runtime(rt, trace)
+    assert len(done) == len(trace)
+    assert any(r.route for r in done)
+    for r in done:
+        assert sum(r.breakdown.values()) == pytest.approx(
+            r.jct, abs=BREAKDOWN_ABS), (mode, r.rid, r.breakdown, r.jct)
+        assert 0 < r.ttft <= r.jct + 1e-12
+        assert all(v >= -1e-12 for v in r.breakdown.values()), r.breakdown
+        assert r.route and "->" in r.route

@@ -1,0 +1,156 @@
+"""Property tests for the production trace harness (ISSUE 6).
+
+The determinism contract (DESIGN.md §11) is checked at the strongest
+surface available: byte-identity of the canonical serialization (equal
+SHA-1 digests).  Structural invariants (arrivals monotone, rids dense,
+SLO classes/metrics registered, per-tenant conservation under merge) are
+property-tested over randomized build inputs via the hypothesis shim in
+``tests/_hypothesis_compat.py``.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.serving.kvstore import SLO_CLASSES
+from repro.workloads import (
+    ARCHETYPES,
+    DEFAULT_GEOM,
+    TenantSpec,
+    Trace,
+    build_trace,
+    default_tenants,
+    make_arrivals,
+    scaled_trace,
+    trace_requests,
+    validate,
+)
+from repro.workloads.trace import SLO_METRICS
+
+ARRIVAL_KINDS = ("poisson", "diurnal", "mmpp")
+
+
+def _tenants(rate_scale=0.5):
+    return default_tenants(rate_scale=rate_scale)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: same seed => byte-identical trace
+# ---------------------------------------------------------------------------
+@settings(max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       duration=st.floats(min_value=2.0, max_value=30.0))
+def test_same_seed_is_byte_identical(seed, duration):
+    a = build_trace(_tenants(), duration=duration, seed=seed)
+    b = build_trace(_tenants(), duration=duration, seed=seed)
+    assert a.digest() == b.digest()
+    assert a.to_jsonl() == b.to_jsonl()
+
+
+def test_different_seeds_differ():
+    a = build_trace(_tenants(), duration=20.0, seed=1)
+    b = build_trace(_tenants(), duration=20.0, seed=2)
+    assert a.digest() != b.digest()
+
+
+def test_jsonl_round_trip_preserves_digest():
+    tr = build_trace(_tenants(), duration=15.0, seed=7)
+    back = Trace.from_jsonl(tr.to_jsonl())
+    assert back.digest() == tr.digest()
+    assert len(back) == len(tr)
+
+
+# ---------------------------------------------------------------------------
+# Structural invariants over randomized single-tenant streams
+# ---------------------------------------------------------------------------
+@settings(max_examples=20)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       scenario=st.sampled_from(sorted(ARCHETYPES)),
+       arrival=st.sampled_from(ARRIVAL_KINDS),
+       rate=st.floats(min_value=0.2, max_value=6.0),
+       duration=st.floats(min_value=1.0, max_value=25.0))
+def test_stream_invariants(seed, scenario, arrival, rate, duration):
+    """Arrivals non-decreasing, rids dense, every SLO class and metric
+    registered, lengths positive — the full ``validate`` contract — for
+    every archetype under every arrival process."""
+    tr = build_trace([TenantSpec("t0", scenario, rate, arrival)],
+                     duration=duration, seed=seed)
+    validate(tr)                      # raises on any violated invariant
+    ts = [e.t for e in tr.events]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+    for e in tr.events:
+        assert e.slo_class in SLO_CLASSES
+        assert e.slo_metric in SLO_METRICS
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       kind=st.sampled_from(ARRIVAL_KINDS),
+       rate=st.floats(min_value=0.5, max_value=20.0),
+       duration=st.floats(min_value=1.0, max_value=40.0))
+def test_arrival_processes_stay_in_window(seed, kind, rate, duration):
+    rng = np.random.default_rng(seed)
+    proc = make_arrivals(kind, rate)
+    times = proc.times(duration, rng)
+    assert proc.mean_rate() > 0
+    assert np.all(np.diff(times) >= 0)
+    if len(times):
+        assert times[0] >= 0.0 and times[-1] < duration
+
+
+# ---------------------------------------------------------------------------
+# Superposition: merge conserves every tenant's events
+# ---------------------------------------------------------------------------
+@settings(max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       duration=st.floats(min_value=5.0, max_value=30.0))
+def test_merge_conserves_per_tenant_counts(seed, duration):
+    tenants = _tenants()
+    merged = build_trace(tenants, duration=duration, seed=seed)
+    validate(merged)
+    counts = merged.counts_by_tenant()
+    # Rebuild each tenant's stream standalone (same child rng indexing as
+    # build_trace) and check the merge dropped/duplicated nothing.
+    from repro.workloads.scenarios import build_tenant_trace
+    total = 0
+    for i, ten in enumerate(tenants):
+        part, _ = build_tenant_trace(ten, duration, seed, stream=i)
+        assert counts.get(ten.name, 0) == len(part), ten.name
+        total += len(part)
+    assert len(merged) == total
+
+
+def test_merge_is_arrival_sorted_with_dense_rids():
+    merged = build_trace(_tenants(), duration=20.0, seed=3)
+    for i, e in enumerate(merged.events):
+        assert e.rid == i
+    ts = [e.t for e in merged.events]
+    assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# Simulator materialization
+# ---------------------------------------------------------------------------
+def test_to_requests_prefix_hits_and_payload_sizing():
+    tr = build_trace(_tenants(2.0), duration=20.0, seed=11)
+    reqs = trace_requests(tr)
+    assert len(reqs) == len(tr)
+    seen = set()
+    n_hits = 0
+    for e, r in zip(tr.events, reqs):
+        assert r.rid == e.rid and r.arrival == e.t
+        assert r.kv_bytes == pytest.approx(
+            DEFAULT_GEOM.kv_bytes(e.ctx_tokens))
+        # prefix_hit is set exactly on repeats of an already-seen group
+        assert r.prefix_hit == (e.prefix_group in seen)
+        seen.add(e.prefix_group)
+        n_hits += r.prefix_hit
+    assert n_hits > 0          # chat/classify sharing must show up
+
+
+def test_scaled_trace_hits_target_size():
+    for target in (500, 2000):
+        tr = scaled_trace(target, seed=5)
+        assert 0.5 * target <= len(tr) <= 2.0 * target, \
+            (target, len(tr))
+        validate(tr)
