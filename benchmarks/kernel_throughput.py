@@ -49,6 +49,33 @@ def run(smoke: bool = False) -> None:
          f"hbm_traffic_ratio_vs_bf16={kv_bytes_int8/kv_bytes_bf16:.2f} "
          f"modeled_tpu_us={kv_bytes_int8/819e9*1e6:.2f}")
 
+    # paged fused dequant-attention (ISSUE 7): same math, but K/V pages
+    # are gathered through a per-slot block table instead of a dense
+    # (B, S) layout — the arena's decode path
+    ps = 32
+    pps = s // ps
+    n_pages = 1 + b * pps
+    bt = rng.permutation(np.arange(1, n_pages)).reshape(b, pps)
+    kcp = np.zeros((n_pages, hkv, ps, d), np.int8)
+    vcp = np.zeros((n_pages, hkv, ps, d), np.int8)
+    ksp = np.zeros((n_pages, hkv, ps, d // g), np.float32)
+    vsp = np.zeros((n_pages, hkv, ps, d // g), np.float32)
+    for i in range(b):
+        for p in range(pps):
+            sl = slice(p * ps, (p + 1) * ps)
+            kcp[bt[i, p]], vcp[bt[i, p]] = k8[i, :, sl], v8[i, :, sl]
+            ksp[bt[i, p]], vsp[bt[i, p]] = ks[i, :, sl], vs[i, :, sl]
+    kv_lens = jnp.full((b,), s, jnp.int32)
+    us = time_call(lambda: jax.block_until_ready(
+        K.paged_attention_op(q, jnp.asarray(kcp), jnp.asarray(ksp),
+                             jnp.asarray(vcp), jnp.asarray(vsp),
+                             jnp.asarray(bt, jnp.int32), kv_lens,
+                             bits=8, group=g)), repeats=1)
+    emit("kernel_paged_attn_int8", us,
+         f"pages={n_pages} page_size={ps} "
+         f"hbm_traffic_ratio_vs_bf16={kv_bytes_int8/kv_bytes_bf16:.2f} "
+         f"modeled_tpu_us={kv_bytes_int8/819e9*1e6:.2f}")
+
     # host codec throughput (the real network-path codec)
     codes = rng.integers(0, 16, size=(1 << 20) if smoke else (4 << 20),
                          dtype=np.uint8)

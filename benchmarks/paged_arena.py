@@ -1,0 +1,262 @@
+"""Paged KV arena benchmark (ISSUE 7, EXPERIMENTS.md §Perf #9).
+
+Two acceptance properties of the paged decode arena (DESIGN.md §12):
+
+* **Capacity** — at a FIXED arena HBM budget, quantized-resident pages
+  (int4/int8 codes + per-group fp16 scales consumed in place by the
+  fused dequant-attention kernel) hold ≥2x more concurrently decodable
+  slots than dense bf16 pages (the int4 layouts; int8 lands near the
+  raw 2x code shrink minus scale overhead).  Pure byte accounting via
+  :meth:`PageTable.page_bytes_fp16` / :meth:`page_bytes_quant` — no
+  timing, fully deterministic.
+
+* **TTFT** — the real 1x1 ServingRuntime (virtual clock) serving a
+  paged-eligible profile: with ``RuntimeConfig.paged`` the pool hit's
+  materialized decompress leaves the TTFT breakdown (~0, the pages feed
+  the fused kernel directly) while the dense runtime still pays
+  V/s_dec; per-request breakdowns must keep summing to JCT in both.
+  All reported numbers are virtual-clock quantities (byte counts /
+  configured rates), so the grid is machine-independent.
+
+Determinism contract: the payload is a pure function of the
+configuration — no wall-clock values enter the JSON, floats are rounded
+to 6 significant digits.  The grid is committed at
+``BENCH_paged_arena.json``; CI regenerates it and fails when the
+committed copy is stale (``python -m benchmarks.paged_arena --check``).
+Refresh with ``python -m benchmarks.paged_arena --smoke --write``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from typing import Dict, Optional
+
+from benchmarks.common import emit, write_json
+from repro.core.kvcache import PageTable
+from repro.core.profiles import Profile
+from repro.core.strategy import StrategyConfig, paged_eligible
+from repro.serving.network import GBPS, BandwidthTrace
+
+BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_paged_arena.json")
+
+# tiny-lm decode-arena geometry (engine defaults: seq=64 + 6 decode + 2)
+L, H, D = 4, 2, 32
+MAX_LEN, PAGE_SIZE = 72, 8
+N_DENSE_SLOTS = 16
+QUANT_LAYOUTS = ((8, 32), (4, 32), (4, 16))   # (bits, channel group)
+WORKLOAD_CYCLE = ("qalike", "codelike", "mathlike", "summlike")
+
+
+# ---------------------------------------------------------------------------
+# Part 1: slots at a fixed HBM budget (analytic byte accounting)
+# ---------------------------------------------------------------------------
+def capacity_grid() -> Dict[str, object]:
+    pps = MAX_LEN // PAGE_SIZE
+    fp16_page = PageTable.page_bytes_fp16(PAGE_SIZE, H, D, L)
+    budget = N_DENSE_SLOTS * pps * fp16_page
+    rows = []
+    for bits, group in QUANT_LAYOUTS:
+        q_page = PageTable.page_bytes_quant(PAGE_SIZE, H, D, L,
+                                            bits=bits, group=group)
+        slots = int((budget // q_page) // pps)
+        rows.append({
+            "bits": bits, "group": group,
+            "page_bytes_fp16": int(fp16_page),
+            "page_bytes_quant": int(q_page),
+            "slots_dense": N_DENSE_SLOTS,
+            "slots_quant": slots,
+            "slots_ratio": slots / N_DENSE_SLOTS,
+        })
+    return {"hbm_budget_bytes": int(budget), "pages_per_slot": pps,
+            "layouts": rows}
+
+
+# ---------------------------------------------------------------------------
+# Part 2: TTFT breakdown, paged vs dense runtime (virtual clock)
+# ---------------------------------------------------------------------------
+def _eligible_profile() -> Profile:
+    p = Profile(
+        StrategyConfig(quantizer="uniform", key_bits=8, value_bits=8,
+                       granularity="per_token", symmetric=True,
+                       group_size=32),
+        cr=2.0, s_enc=5e8, s_dec=5e8)
+    assert paged_eligible(p.strategy)
+    return p
+
+
+def ttft_grid() -> Dict[str, object]:
+    from repro.serving import SchedulerConfig
+    from repro.serving.engine import RuntimeConfig, ServingRuntime
+
+    out: Dict[str, object] = {}
+    for name, paged in (("dense", False), ("paged", True)):
+        cfg = RuntimeConfig(seq=64, decode_tokens=6, prefill_tok_s=2000.0,
+                            decode_tok_s=500.0, paged=paged,
+                            page_size=PAGE_SIZE)
+        rt = ServingRuntime(
+            static_profile=_eligible_profile(), config=cfg,
+            trace=BandwidthTrace.constant(1 * GBPS),
+            scheduler=SchedulerConfig(max_slots=6, max_prefills_per_step=2,
+                                      max_queue=32))
+        # 4 writers, then 4 repeats of the same prompts => 4 pool hits
+        for seed, w in enumerate(WORKLOAD_CYCLE):
+            rt.submit(w, prompt_seed=seed)
+            rt.step()
+        rt.run()
+        for seed, w in enumerate(WORKLOAD_CYCLE):
+            rt.submit(w, prompt_seed=seed)
+            rt.step()
+        rt.run()
+        hits = [r for r in rt.completed if r.pool_hit]
+        colds = [r for r in rt.completed if not r.pool_hit]
+        assert len(hits) == len(colds) == len(WORKLOAD_CYCLE), (
+            len(hits), len(colds))
+        for r in rt.completed:   # breakdowns must still sum to JCT
+            gap = abs(sum(r.breakdown.values()) - r.jct)
+            assert gap < 1e-9, (r.rid, r.breakdown, r.jct)
+        mean = lambda vals: sum(vals) / len(vals)
+        out[name] = {
+            "n_hits": len(hits),
+            "ttft_hit_mean": mean([r.ttft for r in hits]),
+            "ttft_cold_mean": mean([r.ttft for r in colds]),
+            "hit_decompress_mean": mean(
+                [r.breakdown.get("decompress", 0.0) for r in hits]),
+            "hit_comm_mean": mean(
+                [r.breakdown.get("comm", 0.0) for r in hits]),
+            "hit_wire_bytes": int(sum(r.wire_bytes for r in hits)),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Committed-JSON plumbing (same contract as benchmarks/trace_grid.py)
+# ---------------------------------------------------------------------------
+def _round(x, sig: int = 6):
+    if isinstance(x, dict):
+        return {k: _round(v, sig) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_round(v, sig) for v in x]
+    if isinstance(x, bool) or not isinstance(x, float):
+        return x
+    if x == 0.0 or not math.isfinite(x):
+        return x
+    return round(x, sig - 1 - int(math.floor(math.log10(abs(x)))))
+
+
+def build_grid(smoke: bool = True) -> Dict[str, object]:
+    return _round({
+        "version": 1,
+        "smoke": bool(smoke),
+        "geometry": {"num_layers": L, "kv_heads": H, "head_dim": D,
+                     "max_len": MAX_LEN, "page_size": PAGE_SIZE},
+        "capacity": capacity_grid(),
+        "ttft": ttft_grid(),
+    })
+
+
+def _diff(a, b, path="") -> Optional[str]:
+    if isinstance(a, dict) and isinstance(b, dict):
+        for k in sorted(set(a) | set(b)):
+            d = _diff(a.get(k), b.get(k), f"{path}.{k}")
+            if d:
+                return d
+        return None
+    if isinstance(a, list) and isinstance(b, list):
+        if len(a) != len(b):
+            return f"{path}: length {len(a)} != {len(b)}"
+        for i, (x, y) in enumerate(zip(a, b)):
+            d = _diff(x, y, f"{path}[{i}]")
+            if d:
+                return d
+        return None
+    if a != b:
+        return f"{path}: {a!r} != {b!r}"
+    return None
+
+
+def check_against_committed(grid: Dict[str, object]) -> None:
+    if not os.path.exists(BENCH_PATH):
+        raise AssertionError(
+            f"{BENCH_PATH} missing — generate it with "
+            f"`python -m benchmarks.paged_arena --smoke --write`")
+    with open(BENCH_PATH) as f:
+        committed = json.load(f)
+    d = _diff(_round(committed), grid)
+    assert d is None, (
+        f"BENCH_paged_arena.json is stale vs the current code at {d}; "
+        f"refresh with `python -m benchmarks.paged_arena --smoke --write`")
+
+
+def _assert_acceptance(grid: Dict[str, object]) -> None:
+    # Capacity: every int4 layout fits ≥2x the dense slot count
+    for row in grid["capacity"]["layouts"]:
+        if row["bits"] == 4:
+            assert row["slots_ratio"] >= 2.0, row
+        assert row["slots_ratio"] > 1.0, row
+    # TTFT: the paged hit path dropped its materialized decompress ...
+    dense, paged = grid["ttft"]["dense"], grid["ttft"]["paged"]
+    assert dense["hit_decompress_mean"] > 0, dense
+    assert paged["hit_decompress_mean"] == 0.0, paged
+    # ... and nothing else regressed: same bytes moved, faster first token
+    assert paged["hit_wire_bytes"] == dense["hit_wire_bytes"]
+    assert paged["ttft_hit_mean"] < dense["ttft_hit_mean"]
+
+
+def _emit_rows(grid: Dict[str, object]) -> None:
+    for row in grid["capacity"]["layouts"]:
+        emit(f"paged_arena_capacity_int{row['bits']}_g{row['group']}", 0.0,
+             f"slots={row['slots_quant']} vs dense={row['slots_dense']} "
+             f"ratio={row['slots_ratio']:.2f}x "
+             f"page_bytes={row['page_bytes_quant']}")
+    for name in ("dense", "paged"):
+        t = grid["ttft"][name]
+        emit(f"paged_arena_ttft_{name}", 0.0,
+             f"ttft_hit={t['ttft_hit_mean']*1e3:.3f}ms "
+             f"ttft_cold={t['ttft_cold_mean']*1e3:.3f}ms "
+             f"hit_decompress={t['hit_decompress_mean']*1e3:.3f}ms "
+             f"n_hits={t['n_hits']}")
+
+
+def run(smoke: bool = False, write: bool = False, check: bool = False,
+        json_path: str = "") -> None:
+    grid = build_grid(smoke=smoke or check)
+    _emit_rows(grid)
+    _assert_acceptance(grid)
+    if smoke or check:
+        # Determinism: a second build must be byte-identical (virtual
+        # clock + analytic byte accounting, end to end).
+        again = build_grid(smoke=True)
+        d = _diff(grid, again)
+        assert d is None, f"paged-arena grid is non-deterministic at {d}"
+    if write:
+        with open(BENCH_PATH, "w") as f:
+            json.dump(grid, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {BENCH_PATH}")
+    elif smoke or check:
+        check_against_committed(grid)
+    if json_path:
+        write_json(json_path)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized settings + determinism/staleness checks")
+    ap.add_argument("--check", action="store_true",
+                    help="regenerate the grid and fail if the committed "
+                         "BENCH_paged_arena.json is stale")
+    ap.add_argument("--write", action="store_true",
+                    help="refresh the committed BENCH_paged_arena.json")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke or args.write, write=args.write, check=args.check,
+        json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

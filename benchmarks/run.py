@@ -34,6 +34,7 @@ SUITES = [
     ("serving_cluster_scaling", "benchmarks.cluster_scaling"),
     ("serving_sim_speed", "benchmarks.sim_speed"),
     ("serving_trace_grid", "benchmarks.trace_grid"),
+    ("serving_paged_arena", "benchmarks.paged_arena"),
     ("kernels", "benchmarks.kernel_throughput"),
     ("roofline", "benchmarks.roofline"),
 ]

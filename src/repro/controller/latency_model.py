@@ -37,12 +37,23 @@ class ServiceContext:
     # congested 50 Mbps cross-rack wire and an idle 1 Gbps local link get
     # different residual corrections).  "" = single-link / routeless.
     route: str = ""
+    # Decode side runs a paged arena with fused dequant-attention
+    # (DESIGN.md §12): paged-eligible profiles skip the materialized
+    # decompress, so Eq. 1's s_eff term keeps only its encode half.
+    fused_dec: bool = False
 
 
 def predicted_latency(p: Profile, c: ServiceContext) -> float:
-    """T_p(c) per Eq. 1."""
+    """T_p(c) per Eq. 1.  Under a fused-dequant decode arena
+    (``c.fused_dec``) a paged-eligible profile pays only the encode side
+    of the codec: V/s_enc instead of V/s_eff."""
+    from repro.core.strategy import paged_eligible
+
     v = c.kv_bytes
-    s_term = 0.0 if p.s_eff == float("inf") else v / p.s_eff
+    if c.fused_dec and paged_eligible(p.strategy):
+        s_term = 0.0 if p.s_enc == float("inf") else v / p.s_enc
+    else:
+        s_term = 0.0 if p.s_eff == float("inf") else v / p.s_eff
     return c.t_model + s_term + v / (c.bandwidth * p.cr)
 
 
@@ -91,12 +102,18 @@ class TierFetch:
     s_dec: float = float("inf")   # decode-side decompress throughput
     s_enc: float = float("inf")   # source-side re-encode throughput
     variant: str = "stored"
+    # The fetched encoding lands as packed quantized pages consumed by
+    # the fused dequant-attention decode (DESIGN.md §12) — no
+    # materialized decompress term.
+    fused_dequant: bool = False
 
 
 def tier_fetch_latency(opt: TierFetch) -> float:
     """T_fetch = o + V/s_enc + wire/B_tier + V/s_dec — the tier-aware
-    analogue of Eq. 1's transfer term."""
+    analogue of Eq. 1's transfer term.  ``fused_dequant`` drops the
+    V/s_dec term: the pages decode in place."""
     enc = 0.0 if opt.s_enc == float("inf") else opt.kv_bytes / opt.s_enc
-    dec = 0.0 if opt.s_dec == float("inf") else opt.kv_bytes / opt.s_dec
+    dec = (0.0 if opt.fused_dequant or opt.s_dec == float("inf")
+           else opt.kv_bytes / opt.s_dec)
     return (opt.overhead + enc + opt.wire_bytes / max(opt.bandwidth, 1e-9)
             + dec)

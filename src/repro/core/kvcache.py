@@ -1,4 +1,5 @@
-"""Canonical host-side KV cache container used on the network path.
+"""Canonical host-side KV cache container used on the network path, and
+the page-table bookkeeping for the paged decode arena (DESIGN.md §12).
 
 Layout: ``k, v : (num_layers, kv_heads, seq, head_dim)`` float32 arrays that
 *logically* represent bf16 wire data (2 bytes/elem), matching the paper's
@@ -6,11 +7,12 @@ BF16 baseline accounting.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Dict, List
 
 import numpy as np
 
-from repro.core.strategy import SOURCE_BYTES
+from repro.core.strategy import SCALE_BYTES, SOURCE_BYTES
 
 
 @dataclass
@@ -67,3 +69,112 @@ class KVCache:
             np.allclose(self.k, other.k, atol=atol, rtol=rtol)
             and np.allclose(self.v, other.v, atol=atol, rtol=rtol)
         )
+
+
+# ---------------------------------------------------------------------------
+# Paged-arena page table (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+class ArenaOutOfPages(RuntimeError):
+    """The shared page pool is exhausted — a slot asked for more pages
+    than the free list holds.  Admission control should have prevented
+    this; raising (rather than silently corrupting a stolen page) keeps
+    page ownership single-writer by construction."""
+
+
+@dataclass
+class PageTable:
+    """Host-side bookkeeping for a paged KV arena.
+
+    The device pools are ``(num_pages, page_size, ...)`` arrays; this
+    table tracks which pool pages each slot owns.  Page 0 is reserved as
+    the scratch page — it is never allocated, every unmapped block-table
+    entry points at it, and parked/inert cache writes land in it, so
+    real pages are single-writer: exactly one slot owns any page > 0.
+
+    Invariants (checked by :meth:`check`):
+      * ``len(free) + sum(len(pages[s]))  ==  num_pages - 1``
+      * no page id appears twice (across the free list + all slots)
+      * page 0 is never owned and never free-listed
+    """
+
+    num_pages: int
+    page_size: int
+    free: List[int] = field(default_factory=list)
+    pages: Dict[int, List[int]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        assert self.num_pages >= 2 and self.page_size >= 1
+        if not self.free and not self.pages:
+            # LIFO free list: recently released pages are re-used first
+            # (they are the ones most likely still warm in cache).
+            self.free = list(range(self.num_pages - 1, 0, -1))
+
+    # -- capacity ------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def ensure(self, slot: int, n_tokens: int) -> List[int]:
+        """Grow ``slot`` to cover ``n_tokens`` positions, allocating pages
+        on demand.  Returns the newly allocated page ids (often empty).
+        Raises :class:`ArenaOutOfPages` when the pool cannot cover it —
+        the slot keeps whatever it already owned (no partial grant)."""
+        owned = self.pages.setdefault(slot, [])
+        need = self.pages_for(n_tokens) - len(owned)
+        if need <= 0:
+            return []
+        if need > len(self.free):
+            raise ArenaOutOfPages(
+                f"slot {slot} needs {need} more page(s) of {self.page_size} "
+                f"tokens but only {len(self.free)} free of {self.num_pages}")
+        new = [self.free.pop() for _ in range(need)]
+        owned.extend(new)
+        return new
+
+    def release(self, slot: int) -> int:
+        """Return all of ``slot``'s pages to the free pool."""
+        owned = self.pages.pop(slot, [])
+        self.free.extend(owned)
+        return len(owned)
+
+    def block_row(self, slot: int, row_len: int) -> np.ndarray:
+        """The slot's block-table row, padded with the scratch sentinel 0
+        to ``row_len`` entries (row_len = ceil(max_len / page_size))."""
+        owned = self.pages.get(slot, [])
+        assert len(owned) <= row_len, (slot, len(owned), row_len)
+        row = np.zeros(row_len, np.int32)
+        row[:len(owned)] = owned
+        return row
+
+    def check(self) -> None:
+        """Assert the conservation + single-ownership invariants."""
+        seen = set(self.free)
+        assert len(seen) == len(self.free), "free list holds duplicates"
+        total = len(self.free)
+        for slot, owned in self.pages.items():
+            for p in owned:
+                assert 0 < p < self.num_pages, (slot, p)
+                assert p not in seen, f"page {p} double-owned"
+                seen.add(p)
+            total += len(owned)
+        assert 0 not in seen, "scratch page 0 was allocated"
+        assert total == self.num_pages - 1, (total, self.num_pages - 1)
+
+    # -- byte accounting (capacity experiments) ------------------------
+    @staticmethod
+    def page_bytes_fp16(page_size: int, kv_heads: int, head_dim: int,
+                        num_layers: int) -> int:
+        """Logical HBM bytes of one fp16/bf16 K+V page across layers."""
+        return 2 * num_layers * page_size * kv_heads * head_dim * SOURCE_BYTES
+
+    @staticmethod
+    def page_bytes_quant(page_size: int, kv_heads: int, head_dim: int,
+                         num_layers: int, bits: int, group: int) -> int:
+        """Logical HBM bytes of one quantized K+V page (codes + fp16
+        scales at one scale per ``group`` channels per token)."""
+        elems = num_layers * page_size * kv_heads * head_dim
+        per_tensor = elems * bits // 8 + (elems // group) * SCALE_BYTES
+        return 2 * per_tensor

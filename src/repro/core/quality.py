@@ -182,6 +182,241 @@ def inject_kv(cfg, caches, batch_idx: int, kv: KVCache):
 
 
 # ---------------------------------------------------------------------------
+# Paged decode arena (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def init_paged_pools(cfg, num_pages: int, page_size: int, group: int):
+    """Build the paged arena's device pools: ``(pool, qcodes, qscales)``.
+
+    ``pool`` mirrors ``init_cache``'s pytree with the (batch, max_len)
+    leading axes replaced by (num_pages, page_size) — logical position
+    ``t`` of a slot lives at row ``t % page_size`` of the pool page named
+    by entry ``t // page_size`` of its block table.  ``qcodes``/
+    ``qscales`` are the parallel quantized pools (int8 codes + f32
+    scales, one scale per ``group`` channels per token) sharing the SAME
+    page ids: a page holds either fp content or quantized content, and
+    the per-slot ``quant_len`` decides which pool each position reads
+    from.  Page 0 is the reserved scratch page (never allocated)."""
+    from repro.models import init_cache
+
+    pool = init_cache(cfg, num_pages, max_len=page_size)
+    qcodes = jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape, jnp.int8), pool)
+    qscales = jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape[:-1] + (a.shape[-1] // group,),
+                            jnp.float32), pool)
+    return pool, qcodes, qscales
+
+
+def _paged_view(leaf, bt, prefix: bool):
+    """Gather a pool leaf into the dense (·, B, S, H, D) decode view."""
+    if prefix:  # (P, ps, H, D) -> (B, PPS*ps, H, D)
+        g = jnp.take(leaf, bt, axis=0)
+        return g.reshape(g.shape[0], -1, *g.shape[3:])
+    g = jnp.take(leaf, bt, axis=1)  # (n, B, PPS, ps, H, D)
+    return g.reshape(g.shape[0], g.shape[1], -1, *g.shape[4:])
+
+
+def _blend_quant(view, qc_view, qs_view, quant_len, prefix: bool):
+    """Dequantize the quant-pool view and take it for positions below
+    each slot's ``quant_len`` (exactly the ``group_dequantize`` math:
+    signed codes x f32 scale, then cast to the cache compute dtype)."""
+    d = view.shape[-1]
+    g = d // qs_view.shape[-1]
+    x = qc_view.astype(jnp.float32).reshape(qc_view.shape[:-1] + (d // g, g))
+    x = (x * qs_view[..., None].astype(jnp.float32)
+         ).reshape(qc_view.shape).astype(view.dtype)
+    s = view.shape[1] if prefix else view.shape[2]
+    use_q = jnp.arange(s, dtype=jnp.int32)[None, :] < quant_len[:, None]
+    m = use_q[:, :, None, None] if prefix else use_q[None, :, :, None, None]
+    return jnp.where(m, x, view)
+
+
+def _pad_axis(x, target: int, axis: int):
+    cur = x.shape[axis]
+    if cur >= target:
+        return jax.lax.slice_in_dim(x, 0, target, axis=axis)
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - cur)
+    return jnp.pad(x, pad)
+
+
+@lru_cache(maxsize=8)
+def _paged_steps(cfg_name: str, page_size: int):
+    """Jitted paged-arena kernels for one model config: ``(arena, copy)``.
+
+    ``arena(params, pool, qcodes, qscales, bt, quant_len, tokens, pos,
+    mask)`` is the paged analogue of ``_jitted_steps``'s arena decode:
+    gather every slot's pages into a contiguous view (dequant-blending
+    quantized-resident positions), run one masked ``decode_step``, then
+    scatter ONLY the newly written K/V row back to each slot's page.
+    Parked rows (mask False) are pinned to the view's last position,
+    which maps to the scratch page or the slot's own never-attended tail
+    row, so their writes are inert — same contract as the dense arena.
+    Block tables and lengths are traced: page churn never recompiles.
+
+    ``copy(pool, src, bt_row, src_idx)`` is ``copy_cache_slot`` as a
+    page-map operation: one prefilled source row lands in the slot's
+    owned pages (sentinel-0 tail entries spill into scratch).
+    """
+    from repro.models import decode_step
+
+    cfg = get_config(cfg_name)
+
+    def arena(params, pool, qcodes, qscales, bt, quant_len, tokens, pos,
+              mask):
+        view_len = bt.shape[1] * page_size
+        pos = jnp.where(mask, pos, view_len - 1).astype(jnp.int32)
+
+        def build(prefix):
+            def f(p, qc, qs):
+                return _blend_quant(_paged_view(p, bt, prefix),
+                                    _paged_view(qc, bt, prefix),
+                                    _paged_view(qs, bt, prefix),
+                                    quant_len, prefix)
+            return f
+
+        caches = {
+            "prefix": jax.tree_util.tree_map(
+                build(True), pool["prefix"], qcodes["prefix"],
+                qscales["prefix"]),
+            "blocks": jax.tree_util.tree_map(
+                build(False), pool["blocks"], qcodes["blocks"],
+                qscales["blocks"]),
+        }
+        logits, new_caches = decode_step(cfg, params, caches, tokens, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+        page_idx = jnp.take_along_axis(
+            bt, (pos // page_size)[:, None], axis=1)[:, 0]
+        offset = pos % page_size
+
+        def scat(prefix):
+            def f(p, nv):
+                if prefix:
+                    row = jnp.take_along_axis(
+                        nv, pos[:, None, None, None], axis=1)[:, 0]
+                    return p.at[page_idx, offset].set(row.astype(p.dtype))
+                row = jnp.take_along_axis(
+                    nv, pos[None, :, None, None, None], axis=2)[:, :, 0]
+                return p.at[:, page_idx, offset].set(row.astype(p.dtype))
+            return f
+
+        new_pool = {
+            "prefix": jax.tree_util.tree_map(
+                scat(True), pool["prefix"], new_caches["prefix"]),
+            "blocks": jax.tree_util.tree_map(
+                scat(False), pool["blocks"], new_caches["blocks"]),
+        }
+        return jnp.where(mask, nxt, 0), new_pool
+
+    def copy(pool, src, bt_row, src_idx):
+        pps = bt_row.shape[0]
+
+        def w_prefix(p, s):
+            row = jax.lax.dynamic_slice_in_dim(s, src_idx, 1, 0)[0]
+            row = _pad_axis(row, pps * page_size, axis=0)
+            pages = row.reshape(pps, page_size, *row.shape[1:])
+            return p.at[bt_row].set(pages.astype(p.dtype))
+
+        def w_block(p, s):
+            row = jax.lax.dynamic_slice_in_dim(s, src_idx, 1, 1)[:, 0]
+            row = _pad_axis(row, pps * page_size, axis=1)
+            pages = row.reshape(row.shape[0], pps, page_size,
+                                *row.shape[2:])
+            return p.at[:, bt_row].set(pages.astype(p.dtype))
+
+        return {
+            "prefix": jax.tree_util.tree_map(w_prefix, pool["prefix"],
+                                             src["prefix"]),
+            "blocks": jax.tree_util.tree_map(w_block, pool["blocks"],
+                                             src["blocks"]),
+        }
+
+    return jax.jit(arena), jax.jit(copy)
+
+
+def copy_cache_slot_paged(cfg, pool, src, bt_row, page_size: int,
+                          src_idx: int = 0):
+    """Paged ``copy_cache_slot``: land one prefilled source row in the
+    pages of ``bt_row`` (a (PPS,) int32 row; 0 entries spill to scratch)."""
+    if "self" in pool:
+        raise NotImplementedError("paged arena: decoder-only caches")
+    _, copy = _paged_steps(cfg.name, page_size)
+    return copy(pool, src, jnp.asarray(bt_row, jnp.int32),
+                jnp.asarray(src_idx, jnp.int32))
+
+
+def _paged_scatter(cfg, pool, bt_row, k_arr, v_arr, upto: int,
+                   page_size: int):
+    """Scatter per-layer (L, H, S, X) k/v arrays into a slot's pages —
+    the page-map core of ``inject_kv_paged``/``inject_quant_pages``.
+    Only the first ``ceil(upto / page_size)`` owned pages are written
+    (partial-page tails are zero-filled; the slot is fresh, so nothing
+    real is clobbered)."""
+    from repro.models.transformer import plan_stack
+
+    plan = plan_stack(cfg)
+    n_used = -(-upto // page_size)
+    rows = jnp.asarray(np.asarray(bt_row)[:n_used], jnp.int32)
+    li = 0
+
+    def _pages(arr):  # (H, S, X) -> (n_used, ps, H, X)
+        a = jnp.asarray(arr).swapaxes(0, 1)  # (S, H, X)
+        a = _pad_axis(a, n_used * page_size, axis=0)
+        return a.reshape(n_used, page_size, *a.shape[1:])
+
+    new_prefix = {}
+    for i, spec in enumerate(plan.prefix_specs):
+        name = f"layer{i}"
+        c = pool["prefix"][name]
+        if spec.kind != "attn":
+            new_prefix[name] = c
+            continue
+        new_prefix[name] = {
+            "k": c["k"].at[rows].set(_pages(k_arr[li]).astype(c["k"].dtype)),
+            "v": c["v"].at[rows].set(_pages(v_arr[li]).astype(c["v"].dtype)),
+        }
+        li += 1
+    new_blocks = dict(pool["blocks"])
+    attn_per_period = len([s for s in plan.period_specs if s.kind == "attn"])
+    for j, spec in enumerate(plan.period_specs):
+        name = f"layer{j}"
+        if spec.kind != "attn":
+            continue
+        c = pool["blocks"][name]
+        idxs = [li + n * attn_per_period for n in range(plan.n_blocks)]
+        karr = jnp.stack([_pages(k_arr[i2]) for i2 in idxs])
+        varr = jnp.stack([_pages(v_arr[i2]) for i2 in idxs])
+        new_blocks[name] = {
+            "k": c["k"].at[:, rows].set(karr.astype(c["k"].dtype)),
+            "v": c["v"].at[:, rows].set(varr.astype(c["v"].dtype)),
+        }
+        li += 1
+    return {"prefix": new_prefix, "blocks": new_blocks}
+
+
+def inject_kv_paged(cfg, pool, bt_row, kv: KVCache, page_size: int):
+    """Paged ``inject_kv``: write a restored KVCache into a fresh slot's
+    pages as a page-map operation."""
+    return _paged_scatter(cfg, pool, bt_row, kv.k, kv.v, kv.seq, page_size)
+
+
+def inject_quant_pages(cfg, qcodes, qscales, bt_row, k_codes, k_scales,
+                       v_codes, v_scales, upto: int, page_size: int):
+    """Land packed quantized KV straight in the quant page pools — the
+    zero-materialization injection path for paged-eligible strategies.
+    ``k_codes``/``v_codes`` are (L, H, S, D) signed int8;
+    ``k_scales``/``v_scales`` are (L, H, S, D/group) f32 (already
+    round-tripped through fp16, so the fused dequant is bit-identical
+    to the materialized ``group_dequantize`` + inject path)."""
+    new_qc = _paged_scatter(cfg, qcodes, bt_row, k_codes, v_codes, upto,
+                            page_size)
+    new_qs = _paged_scatter(cfg, qscales, bt_row, k_scales, v_scales, upto,
+                            page_size)
+    return new_qc, new_qs
+
+
+# ---------------------------------------------------------------------------
 # Quality evaluation
 # ---------------------------------------------------------------------------
 @lru_cache(maxsize=8)

@@ -4,6 +4,8 @@
   dequant_unpack    — unpack + dequantize (decode side)
   hadamard          — blockwise Hadamard transform on the MXU
   decode_attention  — quantized flash-decode attention (int KV read)
+  paged_attention   — block-table page gather + fused dequant decode
+                      attention over the paged arena (DESIGN.md §12)
 
 Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling, a jit'd
 wrapper in ops.py, and a pure-jnp oracle in ref.py.
@@ -12,8 +14,9 @@ from repro.kernels.ops import (
     decode_attention_op,
     dequant_unpack_op,
     hadamard_op,
+    paged_attention_op,
     quant_pack_op,
 )
 
 __all__ = ["decode_attention_op", "dequant_unpack_op", "hadamard_op",
-           "quant_pack_op"]
+           "paged_attention_op", "quant_pack_op"]

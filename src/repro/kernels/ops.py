@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_attention
 from repro.kernels.hadamard import hadamard_transform as _hadamard
+from repro.kernels.paged_attention import paged_attention as _paged_attention
 from repro.kernels.quant_pack import dequant_unpack as _dequant
 from repro.kernels.quant_pack import quant_pack as _quant
 
@@ -87,10 +88,33 @@ def decode_attention_op(q, k_codes, k_scale, v_codes, v_scale, bits: int = 8,
                                     block_s=block_s, interpret=itp)
 
 
+@functools.partial(jax.jit, static_argnames=("bits", "group", "interpret"))
+def _paged_attention_jit(q, k_codes, k_scale, v_codes, v_scale, block_tables,
+                         kv_lens, bits, group, interpret):
+    return _paged_attention(q, k_codes, k_scale, v_codes, v_scale,
+                            block_tables, kv_lens, bits=bits, group=group,
+                            interpret=interpret)
+
+
+def paged_attention_op(q, k_codes, k_scale, v_codes, v_scale, block_tables,
+                       kv_lens, bits: int = 8, group: int = 64,
+                       interpret: Optional[bool] = None):
+    """Paged quantized decode attention (see paged_attention.py).
+
+    The block table and per-slot lengths are traced (scalar-prefetched
+    into SMEM), so page churn across serving steps never recompiles."""
+    itp = _default_interpret() if interpret is None else interpret
+    return _paged_attention_jit(q, k_codes, k_scale, v_codes, v_scale,
+                                jnp.asarray(block_tables, jnp.int32),
+                                jnp.asarray(kv_lens, jnp.int32),
+                                bits=bits, group=group, interpret=itp)
+
+
 # Re-export oracles for test convenience.
 quantize_ref = ref.quantize_ref
 dequantize_ref = ref.dequantize_ref
 hadamard_ref = ref.hadamard_ref
 decode_attention_ref = ref.decode_attention_ref
+paged_attention_ref = ref.paged_attention_ref
 pack_int4_ref = ref.pack_int4_ref
 unpack_int4_ref = ref.unpack_int4_ref

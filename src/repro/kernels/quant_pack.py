@@ -56,29 +56,40 @@ def _dequant_kernel(codes_ref, scale_ref, out_ref, *, bits: int, group: int,
 def quant_pack(x: jnp.ndarray, bits: int = 8, group: int = 64,
                block_tokens: int = 256, interpret: bool = False
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x (T, D) -> (codes (T, D*bits/8) int8/uint8, scales (T, D/group) f32)."""
+    """x (T, D) -> (codes (T, D*bits/8) int8/uint8, scales (T, D/group) f32).
+
+    T need not divide ``block_tokens``: the tail block is zero-padded on
+    the way in and sliced off the outputs (each token quantizes
+    independently, so padding rows cannot perturb real ones).
+    """
     t, d = x.shape
     assert d % group == 0 and bits in (4, 8)
     assert group % 2 == 0
     bt = min(block_tokens, t)
-    assert t % bt == 0, (t, bt)
+    pad = -t % bt
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)], axis=0)
+    tp = t + pad
     cw = d if bits == 8 else d // 2
     cdtype = jnp.int8 if bits == 8 else jnp.uint8
     kernel = functools.partial(_quant_kernel, bits=bits, group=group)
-    return pl.pallas_call(
+    codes, scales = pl.pallas_call(
         kernel,
-        grid=(t // bt,),
+        grid=(tp // bt,),
         in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0))],
         out_specs=[
             pl.BlockSpec((bt, cw), lambda i: (i, 0)),
             pl.BlockSpec((bt, d // group), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((t, cw), cdtype),
-            jax.ShapeDtypeStruct((t, d // group), jnp.float32),
+            jax.ShapeDtypeStruct((tp, cw), cdtype),
+            jax.ShapeDtypeStruct((tp, d // group), jnp.float32),
         ],
         interpret=interpret,
     )(x)
+    if pad:
+        codes, scales = codes[:t], scales[:t]
+    return codes, scales
 
 
 def dequant_unpack(codes: jnp.ndarray, scales: jnp.ndarray, bits: int = 8,
@@ -88,17 +99,25 @@ def dequant_unpack(codes: jnp.ndarray, scales: jnp.ndarray, bits: int = 8,
     t = codes.shape[0]
     d = codes.shape[1] * (2 if bits == 4 else 1)
     bt = min(block_tokens, t)
-    assert t % bt == 0
+    pad = -t % bt
+    if pad:
+        codes = jnp.concatenate(
+            [codes, jnp.zeros((pad,) + codes.shape[1:], codes.dtype)], axis=0)
+        scales = jnp.concatenate(
+            [scales, jnp.zeros((pad,) + scales.shape[1:], scales.dtype)],
+            axis=0)
+    tp = t + pad
     kernel = functools.partial(_dequant_kernel, bits=bits, group=group,
                                out_dtype=out_dtype)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(t // bt,),
+        grid=(tp // bt,),
         in_specs=[
             pl.BlockSpec((bt, codes.shape[1]), lambda i: (i, 0)),
             pl.BlockSpec((bt, d // group), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((t, d), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((tp, d), out_dtype),
         interpret=interpret,
     )(codes, scales)
+    return out[:t] if pad else out

@@ -93,3 +93,35 @@ def decode_attention_ref(
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", probs, v)
     return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged quantized decode attention (block-table gather + fused dequant)
+# ---------------------------------------------------------------------------
+def paged_attention_ref(
+    q: jnp.ndarray,             # (B, Hkv, Gq, D)
+    k_codes: jnp.ndarray,       # (P, Hkv, PS, D) int8 or (P, Hkv, PS, D/2) u8
+    k_scale: jnp.ndarray,       # (P, Hkv, PS, D/group) f32
+    v_codes: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, PPS) int32 page ids; 0 = unmapped
+    kv_lens: jnp.ndarray,       # (B,) int32 valid lengths
+    bits: int,
+    group: int,
+) -> jnp.ndarray:
+    """Oracle for kernels/paged_attention.py: materialize each slot's
+    pages into a contiguous (B, Hkv, S, ·) view, then reuse the dense
+    decode-attention oracle with per-slot masking."""
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def gather(pool):
+        g = jnp.take(pool, bt, axis=0)       # (B, PPS, Hkv, PS, X)
+        g = jnp.moveaxis(g, 2, 1)            # (B, Hkv, PPS, PS, X)
+        return g.reshape(g.shape[0], g.shape[1], -1, g.shape[-1])
+
+    kc, ks = gather(k_codes), gather(k_scale)
+    vc, vs = gather(v_codes), gather(v_scale)
+    if bits == 4:
+        kc, vc = unpack_int4_ref(kc), unpack_int4_ref(vc)
+    return decode_attention_ref(q, kc, ks, vc, vs, group,
+                                kv_len=jnp.asarray(kv_lens, jnp.int32))

@@ -432,7 +432,7 @@ class ClusterRuntime:
             workload=req.workload, bandwidth=bandwidth, t_slo=req.t_slo,
             q_min=req.q_min, t_model=t_model, kv_bytes=req.kv_bytes,
             slo_metric=req.resolved_slo_metric(self.slo_metric_default),
-            route=route_id)
+            route=route_id, fused_dec=self.cfg.paged)
         predict = getattr(self.controller, "predict", None)
         if predict is not None:
             t = predict(ctx)
@@ -466,13 +466,28 @@ class ClusterRuntime:
                      else tier.trace.at(now))
         common = dict(tier=tier.name, kv_bytes=e.kv_bytes,
                       bandwidth=bandwidth, overhead=tier.fetch_overhead)
+
+        # Under a paged decode arena, paged-eligible encodings land as
+        # quantized pages and decode in the fused attention kernel — the
+        # fetch option drops its V/s_dec term (DESIGN.md §12).
+        def _fused(strategy) -> bool:
+            if not self.cfg.paged:
+                return False
+            from repro.core.strategy import paged_eligible
+            comp = e.payload[0]
+            head_dim = comp.shape[3] if hasattr(comp, "shape") else None
+            return paged_eligible(strategy, head_dim=head_dim)
+
         stored = TierFetch(variant="stored", wire_bytes=e.wire_bytes,
-                           s_dec=e.payload[2], **common)
+                           s_dec=e.payload[2],
+                           fused_dequant=_fused(e.payload[0].strategy),
+                           **common)
         small_bytes = e.kv_bytes / max(small.cr, 1.0)
         if small_bytes >= e.wire_bytes:
             return 0.0
         reenc = TierFetch(variant="reencoded", wire_bytes=small_bytes,
-                          s_enc=small.s_enc, s_dec=small.s_dec, **common)
+                          s_enc=small.s_enc, s_dec=small.s_dec,
+                          fused_dequant=_fused(small.strategy), **common)
         ctx = ServiceContext(
             workload=req.workload, bandwidth=bandwidth, t_slo=req.t_slo,
             q_min=req.q_min, kv_bytes=e.kv_bytes,

@@ -28,6 +28,7 @@ import numpy as np
 from repro.controller import Decision, ServiceAwareController, ServiceContext
 from repro.controller.latency_model import predicted_latency
 from repro.core.profiles import IDENTITY_PROFILE, Profile
+from repro.core.strategy import paged_eligible
 from repro.serving.kvstore import PrefixKVStore, StoreEntry, TieredKVStore
 from repro.serving.network import (
     BandwidthTrace,
@@ -194,6 +195,10 @@ class SimConfig:
     hedge_factor: float = 0.0       # >0: hedged pool fetch at factor×estimate
     pool_fetch_overhead: float = 0.002
     estimator_alpha: float = 0.3
+    # Decode side runs the paged arena with fused dequant-attention
+    # (DESIGN.md §12): paged-eligible profiles skip the materialized
+    # decompress, so their V/s_dec term leaves the critical path.
+    paged: bool = False
     seed: int = 0
 
 
@@ -296,7 +301,10 @@ class Simulator:
       ``prefix_key`` instead of the static ``prefix_hit`` flag.  With a
       tiered store, fetches and write-backs are routed through the
       holding tier's serialized link, so concurrent pool traffic
-      contends (hedged fetches apply to the flat path only).
+      contends.  ``hedge_factor`` hedges slow fetches on the flat path
+      and on the tiered store's REMOTE tier (the replicated pool);
+      local HBM/DRAM tiers are never hedged — there is no replica of a
+      worker's own memory to race.
     * ``scheduler`` — a :class:`SchedulerConfig`; requests are then
       dispatched through :class:`ContinuousScheduler` (admission control +
       SLO-class priority order) rather than strict arrival order.
@@ -492,7 +500,9 @@ class Simulator:
         dec_tok = cfg.decode_tok_s
         s_enc, s_dec, cr = profile.s_enc, profile.s_dec, profile.cr
         enc_inf = s_enc == float("inf")
-        dec_inf = s_dec == float("inf")
+        # fixed profile -> the fused-dequant gate is loop-invariant
+        dec_inf = (s_dec == float("inf")
+                   or (cfg.paged and paged_eligible(profile.strategy)))
         trace = self.trace
         const = (trace.jitter <= 0 and len(trace.times) == 1
                  and trace.values[0] > 0.0)
@@ -616,7 +626,16 @@ class Simulator:
         return ServiceContext(
             workload=req.workload, bandwidth=self.estimator.estimate,
             t_slo=req.t_slo, q_min=req.q_min, t_model=t_model,
-            kv_bytes=req.kv_bytes, slo_metric=self._slo_metric(req))
+            kv_bytes=req.kv_bytes, slo_metric=self._slo_metric(req),
+            fused_dec=self.cfg.paged)
+
+    def _decompress_time(self, profile: Profile, v: float) -> float:
+        """V/s_dec — except under the paged arena (``cfg.paged``), where a
+        paged-eligible profile's pages feed the fused dequant-attention
+        kernel directly and the materialized decompress vanishes."""
+        if self.cfg.paged and paged_eligible(profile.strategy):
+            return 0.0
+        return 0.0 if profile.s_dec == float("inf") else v / profile.s_dec
 
     def _transfer(self, start: float, nbytes: float) -> float:
         dt = self.trace.transfer_time(start, nbytes)
@@ -671,7 +690,7 @@ class Simulator:
         t_c = 0.0 if profile.s_enc == float("inf") else v / profile.s_enc
         payload = v / profile.cr
         t_comm = self._transfer(t + t_c, payload)
-        t_d = 0.0 if profile.s_dec == float("inf") else v / profile.s_dec
+        t_d = self._decompress_time(profile, v)
         req.breakdown["compress"] = t_c
         req.breakdown["comm"] = t_comm
         req.breakdown["decompress"] = t_d
@@ -740,7 +759,7 @@ class Simulator:
         t_c = 0.0 if profile.s_enc == float("inf") else v / profile.s_enc
         payload = v / profile.cr
         tr = link.send(t + t_c, payload)
-        t_d = 0.0 if profile.s_dec == float("inf") else v / profile.s_dec
+        t_d = self._decompress_time(profile, v)
         req.breakdown["compress"] = t_c
         req.breakdown["wire_wait"] = tr.t_wait
         req.breakdown["comm"] = tr.t_comm
@@ -843,20 +862,33 @@ class Simulator:
             stored: Profile = entry.payload
             v = entry.kv_bytes
             payload = float(entry.wire_bytes)
-            t_d = 0.0 if stored.s_dec == float("inf") else v / stored.s_dec
+            t_d = self._decompress_time(stored, v)
             req.chosen = self._profile_name(stored)
         else:
             v = req.kv_bytes
             payload = v / profile.cr
-            t_d = 0.0 if profile.s_dec == float("inf") else v / profile.s_dec
+            t_d = self._decompress_time(profile, v)
         if hit is not None:
             # Tiered fetch: the holding tier's serialized link (concurrent
             # fetches queue — wire_wait is on the critical path); the
-            # fetched entry promotes to the hot tier.  Hedging models
-            # replicated flat pools and does not apply here.
+            # fetched entry promotes to the hot tier.  Hedging models a
+            # replicated pool, so it applies to the REMOTE tier only (the
+            # shared pool has replicas; a worker's own HBM/DRAM does not):
+            # the duplicate fetch races on the replica's own wire, not the
+            # primary's serialized queue.
             overhead = hit.tier.fetch_overhead
             tr = self.store.fetch(hit, ready=start)
             t_comm = tr.t_comm
+            if cfg.hedge_factor > 0 and hit.tier.spec.observe_goodput:
+                expected = payload / self.estimator.estimate
+                if t_comm > cfg.hedge_factor * expected:
+                    t_comm2 = (hit.tier.fetch_overhead
+                               + hit.tier.trace.transfer_time(
+                                   start + cfg.hedge_factor * expected,
+                                   payload))
+                    t_comm = min(t_comm,
+                                 cfg.hedge_factor * expected + t_comm2)
+                    req.retries += 1
             req.breakdown["wire_wait"] = tr.t_wait
             fetch_start = overhead + tr.t_wait
         else:

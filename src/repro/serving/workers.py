@@ -41,15 +41,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.controller import Decision, ServiceAwareController, ServiceContext
+from repro.core import codecs
+from repro.core.kvcache import PageTable
 from repro.core.pipeline import CompressedKV, CompressionPipeline
 from repro.core.profiles import Profile
 from repro.core.quality import (
     _jitted_steps,
+    _paged_steps,
     copy_cache_slot,
+    copy_cache_slot_paged,
     extract_kv,
+    init_paged_pools,
     inject_kv,
+    inject_kv_paged,
+    inject_quant_pages,
 )
-from repro.core.strategy import StrategyConfig
+from repro.core.strategy import StrategyConfig, paged_eligible
 from repro.serving.kvstore import TierSpec
 from repro.serving.request import Request
 
@@ -89,6 +96,38 @@ def decompress_kvs(comps: Sequence[CompressedKV]
     kvs = [CompressionPipeline(c.strategy).decompress(c) for c in comps]
     t_wall = time.perf_counter() - t0
     return kvs, t_wall
+
+
+def quant_entry_arrays(comp: CompressedKV):
+    """Unpack a paged-eligible :class:`CompressedKV` into page-pool form:
+    ``((k_codes, k_scales), (v_codes, v_scales))`` with codes (L, H, S, D)
+    signed int8 and scales (L, H, S, D) per-channel f32 (the stored fp16
+    group scale broadcast across its group — numerically identical to the
+    grouped multiply, so the fused dequant is bit-for-bit equal to
+    ``group_dequantize`` + materialized injection).
+
+    Only valid when ``paged_eligible(comp.strategy)``: one symmetric
+    per-token bucket per tensor, codec "none", no transform."""
+    L, H, S, D = comp.shape
+    out = []
+    for wires in (comp.k_buckets, comp.v_buckets):
+        assert len(wires) == 1, "paged-eligible strategies are single-bucket"
+        w = wires[0]
+        count = int(np.prod(w.codes_shape))
+        codes = codecs.decode_codes(w.payload, w.bits, count,
+                                    comp.strategy.codec)
+        codes = codes.reshape(w.codes_shape)          # (N, S, D) uint8
+        signed = (codes.astype(np.int16)
+                  - (1 << (w.bits - 1))).astype(np.int8)
+        sc = w.scale.astype(np.float32)[..., 0]       # (N, S, D/group)
+        sc = np.repeat(sc, w.group_size, axis=2)[:, :, :D]
+        arr = np.zeros((L, H, S, D), np.int8)
+        sarr = np.zeros((L, H, S, D), np.float32)
+        ls, hs = w.lh_index[:, 0], w.lh_index[:, 1]
+        arr[ls, hs] = signed
+        sarr[ls, hs] = sc
+        out.append((arr, sarr))
+    return out[0], out[1]
 
 
 def recompress_entry(entry, profile: Profile) -> Optional[Tuple[Any, int]]:
@@ -149,6 +188,22 @@ class RuntimeConfig:
     # True injects the wire-restored KV instead (quality-faithful decode;
     # tokens then reflect the selected profile's loss immediately).
     pd_inject_restored: bool = False
+    # Paged decode arena (DESIGN.md §12): the dense (n_slots, max_len)
+    # cache becomes (num_pages, page_size, ...) pools with per-slot block
+    # tables over a shared free pool — slot capacity is allocated page by
+    # page on demand, and pool/PD hits whose stored strategy is
+    # paged-eligible (symmetric per-token uniform int4/int8, see
+    # ``repro.core.strategy.paged_eligible``) land as packed quantized
+    # pages with NO materialized decompress on the TTFT critical path.
+    # For token-exact parity with the dense arena, pick a ``page_size``
+    # that divides ``seq + decode_tokens + 2``.
+    paged: bool = False
+    page_size: int = 16
+    # Total pool pages (including the reserved scratch page 0).  None
+    # sizes it worst-case-safe: n_slots * ceil(max_len / page_size) + 1.
+    # Smaller values oversubscribe HBM (more slots than worst-case fit);
+    # a slot that cannot grow raises ``ArenaOutOfPages``.
+    arena_pages: Optional[int] = None
 
 
 @dataclass
@@ -345,6 +400,19 @@ class DecodeWorker:
         self._positions = np.zeros(n_slots, np.int32)  # next write pos
         self._last_tok = np.zeros(n_slots, np.int32)   # last emitted tok
         self.decode_steps = 0            # lifetime arena decode calls
+        # Paged-arena state (cfg.paged; DESIGN.md §12).  The fp pool
+        # replaces the dense arena in self._arena; the parallel quant
+        # pools hold packed pages for fused-dequant decode, valid per
+        # slot below its _quant_len watermark.
+        self.page_table: Optional[PageTable] = None
+        self._qcodes: Any = None
+        self._qscales: Any = None
+        self._quant_len = np.zeros(n_slots, np.int32)
+
+    @property
+    def _pps(self) -> int:
+        """Block-table row length: pages per worst-case slot."""
+        return -(-self.max_len // self.cfg.page_size)
 
     # ------------------------------------------------------------------
     @property
@@ -365,35 +433,95 @@ class DecodeWorker:
                 raise NotImplementedError(
                     "slot arena masking assumes attention-only caches "
                     "(SSM states advance unmasked)")
-            self._arena = init_cache(self.model.cfg, self.n_slots,
-                                     self.max_len)
+            if self.cfg.paged:
+                num_pages = (self.cfg.arena_pages
+                             or self.n_slots * self._pps + 1)
+                self.page_table = PageTable(num_pages, self.cfg.page_size)
+                # Per-channel scale layout in the sim pools (group=1):
+                # any strategy group maps onto it by broadcasting its
+                # group scale, so one pool serves every eligible profile.
+                self._arena, self._qcodes, self._qscales = init_paged_pools(
+                    self.model.cfg, num_pages, self.cfg.page_size, group=1)
+            else:
+                self._arena = init_cache(self.model.cfg, self.n_slots,
+                                         self.max_len)
         return self._arena
 
     def _arena_fn(self):
         if self._dec_arena is None:
-            _, _, self._dec_arena = _jitted_steps(
-                self.model.cfg.name, self.cfg.seq, self.n_slots,
-                self.max_len)
+            if self.cfg.paged:
+                self._dec_arena, _ = _paged_steps(self.model.cfg.name,
+                                                  self.cfg.page_size)
+            else:
+                _, _, self._dec_arena = _jitted_steps(
+                    self.model.cfg.name, self.cfg.seq, self.n_slots,
+                    self.max_len)
         return self._dec_arena
 
     # ------------------------------------------------------------------
+    def _block_tables(self) -> np.ndarray:
+        bt = np.zeros((self.n_slots, self._pps), np.int32)
+        for s, owned in self.page_table.pages.items():
+            bt[s, :len(owned)] = owned
+        return bt
+
     def copy_from_caches(self, caches, idx: int) -> None:
         """Materialize arena row ``idx`` from a prefill worker's batch-1
         cache (the cold path's slot hand-off)."""
-        self._arena = copy_cache_slot(self.model.cfg, self.ensure_arena(),
+        self.ensure_arena()
+        if self.cfg.paged:
+            self.page_table.ensure(idx, self.cfg.seq)
+            row = self.page_table.block_row(idx, self._pps)
+            self._arena = copy_cache_slot_paged(
+                self.model.cfg, self._arena, caches, row,
+                self.cfg.page_size)
+            self._quant_len[idx] = 0
+            return
+        self._arena = copy_cache_slot(self.model.cfg, self._arena,
                                       caches, idx)
 
     def inject_restored(self, kv, idx: int) -> None:
         """Materialize arena row ``idx`` from a wire-restored KV."""
-        self._arena = inject_kv(self.model.cfg, self.ensure_arena(), idx, kv)
+        self.ensure_arena()
+        if self.cfg.paged:
+            self.page_table.ensure(idx, kv.seq)
+            row = self.page_table.block_row(idx, self._pps)
+            self._arena = inject_kv_paged(self.model.cfg, self._arena,
+                                          row, kv, self.cfg.page_size)
+            self._quant_len[idx] = 0
+            return
+        self._arena = inject_kv(self.model.cfg, self._arena, idx, kv)
 
     def fetch_entry(self, entry, idx: int) -> Tuple[int, float]:
-        """Decompress a stored pool entry and inject it into arena slot
-        ``idx``.  Returns ``(first_token, t_decompress)``.  Cache injection
-        is host-side bookkeeping of the miniature (the cold path's
-        equivalent writes happen inside prefill), so it is not billed to
-        the virtual clock."""
+        """Land a stored pool entry in arena slot ``idx``.  Returns
+        ``(first_token, t_decompress)``.
+
+        Paged arena + paged-eligible stored strategy: the packed codes
+        and fp16 group scales scatter STRAIGHT into the quantized page
+        pools — no fp16 materialization, so the decompress stage leaves
+        the TTFT critical path (the fused dequant runs inside decode
+        attention; under the virtual clock the remaining adapter cost
+        models as V/inf = 0).  Everything else decompresses and injects
+        fp16 pages/rows as before.  Cache injection is host-side
+        bookkeeping of the miniature (the cold path's equivalent writes
+        happen inside prefill), so it is not billed to the virtual
+        clock."""
         comp, first, s_dec = entry.payload
+        if (self.cfg.paged and isinstance(comp, CompressedKV)
+                and paged_eligible(comp.strategy, head_dim=comp.shape[3])):
+            t0 = time.perf_counter()
+            (kc, ks), (vc, vs) = quant_entry_arrays(comp)
+            self.ensure_arena()
+            seq = comp.shape[2]
+            self.page_table.ensure(idx, seq)
+            row = self.page_table.block_row(idx, self._pps)
+            self._qcodes, self._qscales = inject_quant_pages(
+                self.model.cfg, self._qcodes, self._qscales, row,
+                kc, ks, vc, vs, seq, self.cfg.page_size)
+            self._quant_len[idx] = seq
+            t_wall = time.perf_counter() - t0
+            return int(first), codec_cost(self.cfg, t_wall,
+                                          entry.kv_bytes, float("inf"))
         restored, t_wall = decompress_kvs([comp])
         t_decompress = codec_cost(self.cfg, t_wall, entry.kv_bytes, s_dec)
         self.inject_restored(restored[0], idx)
@@ -408,6 +536,9 @@ class DecodeWorker:
     def release(self, slot: Slot) -> None:
         self.free_slots.append(slot.idx)
         del self.slots[slot.req.rid]
+        if self.cfg.paged and self.page_table is not None:
+            self.page_table.release(slot.idx)
+            self._quant_len[slot.idx] = 0
 
     # ------------------------------------------------------------------
     def decode_iteration(self, active: List[Slot]) -> float:
@@ -418,11 +549,26 @@ class DecodeWorker:
         for slot in active:
             mask[slot.idx] = True
         dec = self._arena_fn()
-        t0 = time.perf_counter()
-        nxt, self._arena = dec(
-            self.model.params, self.ensure_arena(),
-            jnp.asarray(self._last_tok[:, None]),
-            jnp.asarray(self._positions), jnp.asarray(mask))
+        self.ensure_arena()
+        if self.cfg.paged:
+            # Grow each live slot to cover this step's write position —
+            # the on-demand allocation that replaces worst-case sizing.
+            for slot in active:
+                self.page_table.ensure(slot.idx,
+                                       int(self._positions[slot.idx]) + 1)
+            t0 = time.perf_counter()
+            nxt, self._arena = dec(
+                self.model.params, self._arena, self._qcodes,
+                self._qscales, jnp.asarray(self._block_tables()),
+                jnp.asarray(self._quant_len),
+                jnp.asarray(self._last_tok[:, None]),
+                jnp.asarray(self._positions), jnp.asarray(mask))
+        else:
+            t0 = time.perf_counter()
+            nxt, self._arena = dec(
+                self.model.params, self._arena,
+                jnp.asarray(self._last_tok[:, None]),
+                jnp.asarray(self._positions), jnp.asarray(mask))
         nxt = np.asarray(nxt)        # the step's single host sync
         wall = time.perf_counter() - t0
         for slot in active:

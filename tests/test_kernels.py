@@ -148,3 +148,129 @@ def test_int4_pack_roundtrip_property():
     assert packed.shape == (64, 64)
     np.testing.assert_array_equal(np.asarray(K.unpack_int4_ref(packed)),
                                   np.asarray(codes))
+
+
+# ---------------------------------------------------------------------------
+# Property tests: ragged token counts (ISSUE 7 satellite).  quant_pack /
+# dequant_unpack pad internally to the token-block grid, so token counts
+# that are NOT multiples of block_tokens (or of anything) must round-trip
+# exactly like their aligned counterparts.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("t", [1, 7, 100, 129, 300])
+def test_quant_pack_ragged_token_counts(bits, t):
+    d, group = 128, 64
+    rng = np.random.default_rng(1000 + t + bits)
+    x = jnp.asarray(rng.standard_normal((t, d)) * 3, jnp.float32)
+    codes, scales = quant_pack_op(x, bits=bits, group=group)
+    cref, sref = K.quantize_ref(x, bits, group)
+    if bits == 4:
+        cref = K.pack_int4_ref(cref)
+    # padding rows must never perturb real rows: per-token quantization
+    # is row-independent, so ragged == aligned, elementwise
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(cref))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(sref),
+                               rtol=1e-5, atol=1e-7)
+    assert codes.shape[0] == t and scales.shape[0] == t
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("t", [5, 77, 200])
+def test_dequant_ragged_roundtrip_bound(bits, t):
+    d, group = 128, 32
+    rng = np.random.default_rng(7 * t + bits)
+    x = jnp.asarray(rng.standard_normal((t, d)) * 2, jnp.float32)
+    codes, scales = quant_pack_op(x, bits=bits, group=group)
+    xr = dequant_unpack_op(codes, scales, bits=bits, group=group,
+                           out_dtype=jnp.float32)
+    assert xr.shape == (t, d)
+    qmax = (1 << (bits - 1)) - 1
+    bound = float(jnp.abs(x).max()) / qmax + 1e-6
+    assert float(jnp.abs(xr - x).max()) <= bound
+
+
+# ---------------------------------------------------------------------------
+# Paged fused dequant-attention (ISSUE 7 tentpole): gather K/V pages via
+# the block table, dequantize in-kernel, attend — vs the jnp oracle.
+# ---------------------------------------------------------------------------
+def _paged_pools(k, v, bits, group, page_size, rng):
+    """Scatter dense (B,H,S,D) K/V into shuffled quantized page pools."""
+    b, hkv, s, d = k.shape
+    kc8, ks = K.quantize_ref(k, bits, group)
+    vc8, vs = K.quantize_ref(v, bits, group)
+    kc = K.pack_int4_ref(kc8) if bits == 4 else kc8
+    vc = K.pack_int4_ref(vc8) if bits == 4 else vc8
+    pps = s // page_size
+    n_pages = 1 + b * pps          # page 0 = scratch, never mapped
+    bt = rng.permutation(np.arange(1, n_pages)).reshape(b, pps)
+    cw, cdt = kc.shape[-1], np.asarray(kc).dtype   # u8 packed / i8 plain
+    kcp = np.zeros((n_pages, hkv, page_size, cw), cdt)
+    vcp = np.zeros((n_pages, hkv, page_size, cw), cdt)
+    ksp = np.zeros((n_pages, hkv, page_size, d // group), np.float32)
+    vsp = np.zeros((n_pages, hkv, page_size, d // group), np.float32)
+    for i in range(b):
+        for p in range(pps):
+            sl = slice(p * page_size, (p + 1) * page_size)
+            pg = bt[i, p]
+            kcp[pg], vcp[pg] = np.asarray(kc[i, :, sl]), np.asarray(vc[i, :, sl])
+            ksp[pg], vsp[pg] = np.asarray(ks[i, :, sl]), np.asarray(vs[i, :, sl])
+    return ((jnp.asarray(kcp), jnp.asarray(ksp), jnp.asarray(vcp),
+             jnp.asarray(vsp)), jnp.asarray(bt, jnp.int32), (kc8, ks, vc8, vs))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("b,hkv,gq,d,s,group,ps", [
+    (2, 2, 4, 64, 256, 32, 16),
+    (1, 4, 8, 128, 128, 64, 8),
+    (3, 1, 2, 128, 512, 128, 64),
+])
+def test_paged_attention_matches_ref(bits, b, hkv, gq, d, s, group, ps):
+    from repro.kernels.paged_attention import paged_attention
+
+    rng = np.random.default_rng(bits * 31 + s + ps)
+    q = jnp.asarray(rng.standard_normal((b, hkv, gq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    (pools, bt, dense) = _paged_pools(k, v, bits, group, ps, rng)
+    kv_lens = jnp.asarray([s, max(s // 2 - 3, 1), 1][:b], jnp.int32)
+    out = paged_attention(q, *pools, bt, kv_lens, bits=bits, group=group,
+                          interpret=True)
+    ref = K.paged_attention_ref(q, *pools, bt, kv_lens, bits=bits,
+                                group=group)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+    # ... and the oracle itself must agree with DENSE ragged attention on
+    # the pre-scatter arrays: the block-table gather is a pure relabeling
+    kc8, ks, vc8, vs = dense
+    dense_ref = K.decode_attention_ref(q, kc8, ks, vc8, vs, group,
+                                       kv_len=kv_lens)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dense_ref),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_paged_attention_scratch_pages_inert():
+    """Unmapped block-table entries point at scratch page 0; whatever
+    garbage it holds must not leak into any row's output (masking by
+    kv_len kills it)."""
+    from repro.kernels.paged_attention import paged_attention
+
+    rng = np.random.default_rng(5)
+    b, hkv, gq, d, s, group, ps = 2, 2, 4, 64, 128, 32, 16
+    q = jnp.asarray(rng.standard_normal((b, hkv, gq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    (pools, bt, _) = _paged_pools(k, v, 8, group, ps, rng)
+    kcp, ksp, vcp, vsp = (np.asarray(p).copy() for p in pools)
+    # poison the scratch page and point every beyond-len entry at it
+    kcp[0], vcp[0] = 127, -128
+    ksp[0], vsp[0] = 1e9, 1e9
+    kv_lens = jnp.asarray([ps + 3, ps], jnp.int32)   # only pages 0..1 live
+    bt_np = np.asarray(bt).copy()
+    bt_np[:, 2:] = 0
+    out_a = paged_attention(q, *pools, jnp.asarray(bt_np), kv_lens,
+                            bits=8, group=group, interpret=True)
+    out_b = paged_attention(q, jnp.asarray(kcp), jnp.asarray(ksp),
+                            jnp.asarray(vcp), jnp.asarray(vsp),
+                            jnp.asarray(bt_np), kv_lens, bits=8,
+                            group=group, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))

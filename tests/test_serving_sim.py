@@ -127,6 +127,74 @@ def test_hedged_fetch_reduces_tail(synthetic_profiles):
     assert np.percentile(hedged.ttft(), 95) <= np.percentile(base.ttft(), 95)
 
 
+def test_hedged_fetch_extends_to_tiered_remote():
+    """Bugfix regression: hedging used to apply to the flat pool path
+    only — a tiered store's remote-tier fetch (the SAME replicated pool,
+    just behind a serialized tier link) silently lost its hedge.  The
+    duplicate fetch now races on the replica's own wire, so a jittered
+    remote link's tail shrinks and retries are booked."""
+    from repro.core.profiles import Profile
+    from repro.core.strategy import StrategyConfig
+    from repro.serving import Request
+    from repro.serving.kvstore import TierSpec, TieredKVStore
+
+    prof = Profile(StrategyConfig(key_bits=8, value_bits=8), cr=2.0,
+                   s_enc=1e9, s_dec=1e9)
+
+    def run(hf):
+        tier_trace = BandwidthTrace([0.0], [1e6], jitter=1.2, seed=4)
+        store = TieredKVStore(
+            [TierSpec("remote", 64 << 20, bandwidth=tier_trace,
+                      fetch_overhead=1e-3, observe_goodput=True)], block=8)
+        for i in range(20):
+            store.put((i,), prof, 100_000, kv_bytes=2e5, now=0.0)
+        reqs = [Request(rid=i, workload="qalike", arrival=1.0 + 0.5 * i,
+                        ctx_tokens=100, out_tokens=2, kv_bytes=2e5,
+                        q_min=0.0, prefix_key=(i,)) for i in range(20)]
+        return Simulator(SimConfig(scenario="pool", hedge_factor=hf, seed=1),
+                         StaticPolicy(prof, "s"),
+                         BandwidthTrace.constant(1e6), reqs,
+                         store=store).run()
+
+    base, hedged = run(0.0), run(2.0)
+    # every request is a pool hit on the remote tier (no prefill)
+    assert all(r.breakdown.get("prefill", 0) == 0 for r in base.requests)
+    assert any(r.retries > 0 for r in hedged.requests)
+    # hedging can only shorten a fetch: pointwise no-worse, tail better
+    for b, h in zip(base.requests, hedged.requests):
+        assert h.ttft <= b.ttft + 1e-12
+    assert np.percentile(hedged.ttft(), 95) < np.percentile(base.ttft(), 95)
+
+
+def test_simulator_paged_drops_decompress_for_eligible_profiles():
+    """SimConfig.paged mirrors the runtime's fused dequant-attention
+    decode (DESIGN.md §12): a paged-eligible profile's V/s_dec term
+    leaves the critical path, an ineligible one still pays it."""
+    from repro.core.profiles import Profile
+    from repro.core.strategy import StrategyConfig
+
+    eligible = Profile(
+        StrategyConfig(key_bits=8, value_bits=8, granularity="per_token",
+                       symmetric=True, group_size=32),
+        cr=2.0, s_enc=1e9, s_dec=1e5)
+    ineligible = Profile(StrategyConfig(key_bits=8, value_bits=8),
+                         cr=2.0, s_enc=1e9, s_dec=1e5)
+    trace = BandwidthTrace.constant(1 * GBPS)
+
+    def run(profile, paged):
+        reqs = _requests(10, seed=2, prefix=1.0)
+        res = Simulator(SimConfig(paged=paged),
+                        StaticPolicy(profile, "s"), trace, reqs).run()
+        bd = res.breakdown()
+        for r in res.requests:   # terms still sum to JCT either way
+            assert abs(sum(r.breakdown.values()) - r.jct) < 1e-6
+        return bd["decompress"]
+
+    assert run(eligible, paged=False) > 0
+    assert run(eligible, paged=True) == 0.0
+    assert run(ineligible, paged=True) > 0
+
+
 def test_bandwidth_trace_integration():
     tr = BandwidthTrace.steps([(0.0, 100.0), (1.0, 50.0)])
     # 150 bytes starting at t=0: 100 in the first second, 50 in the next
