@@ -1,0 +1,38 @@
+"""Domain-specific static analysis for the repro serving stack.
+
+Four repo-specific checkers (DESIGN.md §13) run over the source tree and
+fail CI on any unsuppressed finding::
+
+    python -m repro.analysis [--format=json] [paths...]
+
+Rules
+-----
+* ``host-sync``       — device->host syncs reachable from serving hot loops
+* ``clock-accounting``— unbilled/double-billed time components, clock
+                         regressions in the virtual-clock runtime
+* ``units``           — bytes / seconds / bytes-per-second / token mixing
+* ``kernel-contract`` — Pallas kernel <-> ref.py oracle <-> parity-test
+                         correspondence
+
+Intentional patterns are documented (not silenced) inline with
+``# lint: <token>(reason)`` — see repro.analysis.core.
+"""
+from __future__ import annotations
+
+from repro.analysis import clock, host_sync, kernel_contract, units
+from repro.analysis.cli import main, run_paths
+from repro.analysis.core import Finding, Project, Rule, load_project
+
+ALL_RULES = [
+    Rule(host_sync.RULE_ID, host_sync.TOKEN,
+         "device->host sync in a serving hot path", host_sync.check),
+    Rule(clock.RULE_ID, clock.TOKEN,
+         "virtual-clock billing invariant violation", clock.check),
+    Rule(units.RULE_ID, units.TOKEN,
+         "arithmetic mixing incompatible dimensions", units.check),
+    Rule(kernel_contract.RULE_ID, kernel_contract.TOKEN,
+         "kernel/oracle/parity-test drift", kernel_contract.check),
+]
+
+__all__ = ["ALL_RULES", "Finding", "Project", "Rule", "load_project",
+           "main", "run_paths"]

@@ -1,0 +1,302 @@
+"""host-sync: device->host synchronisation in serving hot paths.
+
+The continuous runtime's contract (DESIGN.md §9/§12) is ONE host sync
+per decode iteration — the (B,) next-token pull.  Every other
+``np.asarray``/``.item()``/``float()``/``int()`` on a device array, and
+every ``jax.device_get``/``block_until_ready``, reachable from the
+per-iteration serving loops stalls the dispatch pipeline and must be
+either hoisted out or documented with ``# lint: sync-ok(reason)``.
+
+Mechanics
+---------
+* **Hot roots**: defs named ``step``/``run``/``serve``/
+  ``decode_iteration``/``prefill`` (or ``_run_*``) in modules under a
+  ``serving`` directory.
+* **Reachability**: a name-based call graph over the scanned ``repro``
+  sources (tests and benchmarks are excluded — they are offline by
+  definition).  Over-approximate on purpose: a bare-name match is an
+  edge.
+* **Device taint** (per hot function, flow-sensitive): values produced
+  by ``jnp.*``/``jax.*`` calls, by jitted callables (defs containing
+  ``jax.jit``, and locals/attributes assigned from them), and anything
+  derived from those are "devicey".  ``np.asarray``/``float``/``int``
+  convert back to host values, so the single sanctioned sync does not
+  taint everything downstream.  Loop bodies are walked twice so
+  loop-carried taint (e.g. ``toks = jnp.argmax(...)`` at the bottom of a
+  decode loop) is seen by the loop's own reads.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.core import Finding, Project, SourceFile, dotted, func_defs
+
+RULE_ID = "host-sync"
+TOKEN = "sync-ok"
+
+ROOT_NAMES = {"step", "run", "serve", "decode_iteration", "prefill"}
+# device->host converters: flagged when fed a devicey value, and their
+# result is a host value (kills taint on reassignment).
+HOST_CONVERTERS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+CASTS = {"float", "int", "bool"}
+
+
+def _is_scanned(f: SourceFile) -> bool:
+    return not (f.in_dir("tests") or f.in_dir("benchmarks")
+                or f.in_dir("examples"))
+
+
+def _contains_jit(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call) and dotted(n.func) == "jax.jit":
+            return True
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in n.decorator_list:
+                d = dec.func if isinstance(dec, ast.Call) else dec
+                if dotted(d) == "jax.jit":
+                    return True
+    return False
+
+
+class _Index:
+    """Project-wide def table + producer/device-callable sets."""
+
+    def __init__(self, files: List[SourceFile]):
+        self.defs: Dict[str, List[Tuple[SourceFile, ast.FunctionDef]]] = {}
+        for f in files:
+            for fn in func_defs(f.tree):
+                self.defs.setdefault(fn.name, []).append((f, fn))
+        # Producers: defs whose result (or the callables they hand out)
+        # produce device arrays.  Seed: anything touching jax.jit.
+        self.producers: Set[str] = {
+            name for name, defs in self.defs.items()
+            if any(_contains_jit(fn) for _, fn in defs)}
+        # Attributes assigned from producer calls (self._pre = _jitted..)
+        self.device_attrs: Set[str] = set()
+        for _ in range(4):  # tiny fixpoint: producer -> attr -> producer
+            before = (len(self.producers), len(self.device_attrs))
+            for f in files:
+                for node in ast.walk(f.tree):
+                    if isinstance(node, ast.Assign) and \
+                            self._produces(node.value):
+                        for tgt in node.targets:
+                            for el in (tgt.elts if isinstance(
+                                    tgt, (ast.Tuple, ast.List)) else [tgt]):
+                                if isinstance(el, ast.Attribute):
+                                    self.device_attrs.add(el.attr)
+            for name, defs in self.defs.items():
+                if name in self.producers:
+                    continue
+                for _, fn in defs:
+                    for n in ast.walk(fn):
+                        if isinstance(n, ast.Return) and n.value is not None \
+                                and self._mentions_device(n.value):
+                            self.producers.add(name)
+                            break
+            if (len(self.producers), len(self.device_attrs)) == before:
+                break
+
+    def _produces(self, expr: ast.AST) -> bool:
+        if not isinstance(expr, ast.Call):
+            return False
+        d = dotted(expr.func)
+        tail = d.rsplit(".", 1)[-1]
+        return d == "jax.jit" or tail in self.producers
+
+    def _mentions_device(self, expr: ast.AST) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Attribute) and n.attr in self.device_attrs:
+                return True
+            if isinstance(n, ast.Call) and self._produces(n):
+                return True
+        return False
+
+
+def _reachable(index: _Index, files: List[SourceFile]
+               ) -> List[Tuple[SourceFile, ast.FunctionDef]]:
+    roots = [
+        (f, fn) for f in files if f.in_dir("serving")
+        for fn in func_defs(f.tree)
+        if fn.name in ROOT_NAMES or fn.name.startswith("_run")]
+    seen: Set[Tuple[str, int]] = set()
+    work = list(roots)
+    out: List[Tuple[SourceFile, ast.FunctionDef]] = []
+    while work:
+        f, fn = work.pop()
+        key = (f.rel, fn.lineno)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append((f, fn))
+        for n in ast.walk(fn):
+            if not isinstance(n, ast.Call):
+                continue
+            name = dotted(n.func).rsplit(".", 1)[-1]
+            for callee in index.defs.get(name, ()):
+                work.append(callee)
+    return out
+
+
+class _TaintWalker:
+    """Flow-sensitive device-taint over one function body."""
+
+    def __init__(self, index: _Index, f: SourceFile, fn: ast.FunctionDef):
+        self.index = index
+        self.f = f
+        self.fn = fn
+        self.findings: Dict[Tuple[int, int], Finding] = {}
+
+    # -- expression taint -------------------------------------------------
+    def _call_is_device(self, call: ast.Call, env: Set[str]) -> bool:
+        d = dotted(call.func)
+        head, tail = d.split(".", 1)[0] if d else "", d.rsplit(".", 1)[-1]
+        if head in ("jnp", "jax") and d not in ("jax.device_get",):
+            return True
+        if tail in self.index.producers or tail in self.index.device_attrs:
+            return True
+        if isinstance(call.func, ast.Name) and call.func.id in env:
+            return True  # call to a device-callable local
+        return False
+
+    def _tainted(self, expr: ast.AST, env: Set[str]) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id in env
+        if isinstance(expr, ast.Attribute):
+            return expr.attr in self.index.device_attrs or \
+                self._tainted(expr.value, env)
+        if isinstance(expr, ast.Call):
+            if self._call_is_device(expr, env):
+                return True
+            d = dotted(expr.func)
+            tail = d.rsplit(".", 1)[-1]
+            # host converters sync and return host values: taint stops here
+            if d in HOST_CONVERTERS or (isinstance(expr.func, ast.Name)
+                                        and expr.func.id in CASTS):
+                return False
+            # calls to known project defs that are NOT producers return
+            # host values (their own internals are analysed separately) —
+            # a tainted argument does not taint the result
+            if tail in self.index.defs:
+                return False
+            return any(self._tainted(c, env)
+                       for c in ast.iter_child_nodes(expr))
+        return any(self._tainted(c, env)
+                   for c in ast.iter_child_nodes(expr))
+
+    # -- sync-site detection ----------------------------------------------
+    def _flag(self, node: ast.AST, what: str, hint: str) -> None:
+        key = (node.lineno, node.col_offset)
+        if key not in self.findings:
+            self.findings[key] = Finding(
+                RULE_ID, self.f.rel, node.lineno,
+                f"{what} in a serving hot path "
+                f"(reachable from a per-iteration loop via "
+                f"{self.fn.name}())", hint)
+
+    def _check_calls(self, expr: ast.AST, env: Set[str]) -> None:
+        for n in ast.walk(expr):
+            if not isinstance(n, ast.Call):
+                continue
+            d = dotted(n.func)
+            tail = d.rsplit(".", 1)[-1]
+            if d == "jax.device_get":
+                self._flag(n, "jax.device_get (host sync)",
+                           "keep the value on device or annotate "
+                           "`# lint: sync-ok(reason)`")
+            elif tail == "block_until_ready":
+                self._flag(n, "block_until_ready (host sync)",
+                           "only wall-clock measurement should block; "
+                           "annotate `# lint: sync-ok(reason)` if so")
+            elif d in HOST_CONVERTERS and n.args and \
+                    self._tainted(n.args[0], env):
+                self._flag(n, f"{d} on a device value (host sync)",
+                           "pull once per iteration at most; annotate "
+                           "`# lint: sync-ok(reason)` for the sanctioned "
+                           "pull")
+            elif isinstance(n.func, ast.Name) and n.func.id in CASTS and \
+                    n.args and self._tainted(n.args[0], env):
+                self._flag(n, f"{n.func.id}() on a device value (host sync)",
+                           "scalarizing a device array blocks dispatch; "
+                           "batch the readback or annotate "
+                           "`# lint: sync-ok(reason)`")
+            elif isinstance(n.func, ast.Attribute) and n.func.attr == "item" \
+                    and not n.args and self._tainted(n.func.value, env):
+                self._flag(n, ".item() on a device value (host sync)",
+                           "use a batched readback instead of per-element "
+                           ".item()")
+
+    # -- statement walk ----------------------------------------------------
+    def _assign(self, targets: List[ast.AST], value: ast.AST,
+                env: Set[str]) -> None:
+        devicey = self._tainted(value, env)
+        # host converters at the top level launder the value back to host
+        if isinstance(value, ast.Call):
+            d = dotted(value.func)
+            if d in HOST_CONVERTERS or (isinstance(value.func, ast.Name)
+                                        and value.func.id in CASTS):
+                devicey = False
+        for tgt in targets:
+            els = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) else [tgt]
+            for el in els:
+                if isinstance(el, ast.Name):
+                    (env.add if devicey else env.discard)(el.id)
+
+    def _walk(self, stmts: List[ast.stmt], env: Set[str]) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue  # nested defs analysed via their own reachability
+            for expr in ast.iter_child_nodes(st):
+                if isinstance(expr, ast.expr):
+                    self._check_calls(expr, env)
+            if isinstance(st, ast.Assign):
+                self._assign(st.targets, st.value, env)
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                self._assign([st.target], st.value, env)
+            elif isinstance(st, ast.AugAssign):
+                if self._tainted(st.value, env) and \
+                        isinstance(st.target, ast.Name):
+                    env.add(st.target.id)
+            elif isinstance(st, (ast.For, ast.AsyncFor)):
+                if self._tainted(st.iter, env) and \
+                        isinstance(st.target, ast.Name):
+                    env.add(st.target.id)
+                for _ in range(2):  # expose loop-carried taint
+                    self._walk(st.body, env)
+                self._walk(st.orelse, env)
+            elif isinstance(st, ast.While):
+                for _ in range(2):
+                    self._walk(st.body, env)
+                self._walk(st.orelse, env)
+            elif isinstance(st, ast.If):
+                b, o = set(env), set(env)
+                self._walk(st.body, b)
+                self._walk(st.orelse, o)
+                env |= b | o
+            elif isinstance(st, ast.With):
+                self._walk(st.body, env)
+            elif isinstance(st, ast.Try):
+                self._walk(st.body, env)
+                for h in st.handlers:
+                    self._walk(h.body, env)
+                self._walk(st.orelse, env)
+                self._walk(st.finalbody, env)
+
+    def run(self) -> List[Finding]:
+        self._walk(self.fn.body, set())
+        return list(self.findings.values())
+
+
+def check(project: Project) -> List[Finding]:
+    files = project.matching(_is_scanned)
+    index = _Index(files)
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, int, int]] = set()
+    for f, fn in _reachable(index, files):
+        for fd in _TaintWalker(index, f, fn).run():
+            key = (fd.path, fd.line, fd.message)
+            if key not in seen:
+                seen.add(key)
+                findings.append(fd)
+    return findings

@@ -1,0 +1,157 @@
+"""kernel-contract: Pallas kernels, oracles, and parity tests in lockstep.
+
+Every public kernel export (`X_op` in ``kernels/__init__.py.__all__``)
+must ship with:
+
+* a pure-jnp oracle ``X_ref`` in ``kernels/ref.py`` (the ground truth),
+* an ``interpret`` fallback parameter on the ``X_op`` wrapper (so the
+  kernel body runs under the Pallas interpreter off-TPU),
+* a parity test referencing BOTH names in one test file under
+  ``tests/``.
+
+And the inverse drift guard: an ``X_ref`` oracle in ``ref.py`` with no
+matching export must at least be a building block referenced by another
+oracle — a fully orphaned oracle means the kernel and its ground truth
+have drifted apart.
+
+Suppression token: ``kernel-ok``.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.core import Finding, Project, SourceFile, func_defs
+
+RULE_ID = "kernel-contract"
+TOKEN = "kernel-ok"
+
+
+def _find_tests_dir(kernels_dir: Path) -> Optional[Path]:
+    for parent in kernels_dir.parents:
+        cand = parent / "tests"
+        if cand.is_dir():
+            return cand
+    return None
+
+
+def _exports(init: SourceFile) -> Dict[str, int]:
+    """{export_name: lineno} from __all__ (falls back to import names)."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(init.tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "__all__" and \
+                        isinstance(node.value, (ast.List, ast.Tuple)):
+                    for el in node.value.elts:
+                        if isinstance(el, ast.Constant) and \
+                                isinstance(el.value, str):
+                            out[el.value] = node.lineno
+    if not out:
+        for node in ast.walk(init.tree):
+            if isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    out[alias.asname or alias.name] = node.lineno
+    return out
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    # A "kernels package" is any scanned dir named `kernels` with both
+    # an __init__.py and a ref.py.
+    by_dir: Dict[Path, Dict[str, SourceFile]] = {}
+    for f in project.files:
+        if f.path.parent.name == "kernels":
+            by_dir.setdefault(f.path.parent, {})[f.path.name] = f
+
+    for kdir, members in sorted(by_dir.items()):
+        init, ref = members.get("__init__.py"), members.get("ref.py")
+        if init is None or ref is None:
+            continue
+        ref_defs: Dict[str, ast.FunctionDef] = {
+            fn.name: fn for fn in func_defs(ref.tree)}
+        # names referenced inside ref.py outside their own def
+        ref_uses: Set[str] = set()
+        for fn in ref_defs.values():
+            for n in ast.walk(fn):
+                if isinstance(n, ast.Call):
+                    tgt = n.func
+                    name = tgt.attr if isinstance(tgt, ast.Attribute) else (
+                        tgt.id if isinstance(tgt, ast.Name) else "")
+                    if name != fn.name:
+                        ref_uses.add(name)
+
+        # wrapper defs across the package (ops.py et al.)
+        wrappers: Dict[str, tuple[SourceFile, ast.FunctionDef]] = {}
+        for m in members.values():
+            for fn in func_defs(m.tree):
+                wrappers.setdefault(fn.name, (m, fn))
+
+        tests_dir = _find_tests_dir(kdir)
+        test_texts = {}
+        if tests_dir is not None:
+            for t in sorted(tests_dir.glob("*.py")):
+                try:
+                    test_texts[t.name] = t.read_text()
+                except OSError:
+                    pass
+
+        exports = _exports(init)
+        op_bases = {name[:-3] for name in exports if name.endswith("_op")}
+        for name, lineno in sorted(exports.items()):
+            if not name.endswith("_op"):
+                continue
+            base = name[:-3]
+            # 1) oracle
+            if f"{base}_ref" not in ref_defs:
+                findings.append(Finding(
+                    RULE_ID, init.rel, lineno,
+                    f"public kernel `{name}` has no `{base}_ref` oracle "
+                    f"in {ref.rel}",
+                    f"add a pure-jnp `{base}_ref` (compose existing "
+                    f"building-block oracles if the kernel is fused)"))
+            # 2) interpret fallback on the wrapper
+            w = wrappers.get(name)
+            if w is None:
+                findings.append(Finding(
+                    RULE_ID, init.rel, lineno,
+                    f"exported kernel `{name}` has no wrapper def in the "
+                    f"kernels package"))
+            else:
+                wf, wfn = w
+                argnames = {a.arg for a in (
+                    wfn.args.args + wfn.args.kwonlyargs)}
+                if "interpret" not in argnames:
+                    findings.append(Finding(
+                        RULE_ID, wf.rel, wfn.lineno,
+                        f"kernel wrapper `{name}` has no `interpret` "
+                        f"fallback parameter",
+                        "add `interpret: Optional[bool] = None` routed "
+                        "through `_default_interpret()` so CPU tests run "
+                        "the Pallas interpreter"))
+            # 3) parity test referencing both names
+            if tests_dir is not None and not any(
+                    name in txt and f"{base}_ref" in txt
+                    for txt in test_texts.values()):
+                findings.append(Finding(
+                    RULE_ID, init.rel, lineno,
+                    f"no parity test under {tests_dir.name}/ references "
+                    f"both `{name}` and `{base}_ref`",
+                    f"add a test asserting {name}(...) matches "
+                    f"{base}_ref(...)"))
+
+        # 4) orphaned oracles
+        for rname, fn in sorted(ref_defs.items()):
+            if not rname.endswith("_ref"):
+                continue
+            base = rname[:-4]
+            if base in op_bases or rname in ref_uses:
+                continue
+            findings.append(Finding(
+                RULE_ID, ref.rel, fn.lineno,
+                f"oracle `{rname}` corresponds to no public kernel export "
+                f"and no other oracle uses it",
+                "export a matching `{}_op`, fold it into the oracle that "
+                "needs it, or delete it".format(base)))
+    return findings

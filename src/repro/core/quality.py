@@ -470,6 +470,7 @@ def _greedy_decode(dec_fn, params, caches, first_tokens, start_pos: int,
     for t in range(steps):
         logits, caches = dec_fn(params, caches, toks, pos + t)
         toks = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        # lint: sync-ok(offline reference decode for agreement scoring)
         out.append(np.asarray(toks)[:, 0])
     return np.stack(out, axis=1)  # (B, steps+1)
 

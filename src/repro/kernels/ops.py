@@ -111,6 +111,8 @@ def paged_attention_op(q, k_codes, k_scale, v_codes, v_scale, block_tables,
 
 
 # Re-export oracles for test convenience.
+quant_pack_ref = ref.quant_pack_ref
+dequant_unpack_ref = ref.dequant_unpack_ref
 quantize_ref = ref.quantize_ref
 dequantize_ref = ref.dequantize_ref
 hadamard_ref = ref.hadamard_ref

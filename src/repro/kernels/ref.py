@@ -49,6 +49,25 @@ def unpack_int4_ref(packed: jnp.ndarray) -> jnp.ndarray:
     return out.reshape(packed.shape[:-1] + (packed.shape[-1] * 2,)).astype(jnp.int8)
 
 
+def quant_pack_ref(x: jnp.ndarray, bits: int, group: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for ops.quant_pack_op: group-quantize, then pack to nibbles
+    when bits == 4 (int8 codes pass through)."""
+    codes, scale = quantize_ref(x, bits, group)
+    if bits == 4:
+        codes = pack_int4_ref(codes)
+    return codes, scale
+
+
+def dequant_unpack_ref(codes: jnp.ndarray, scale: jnp.ndarray, bits: int,
+                       group: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for ops.dequant_unpack_op: unpack nibbles when bits == 4,
+    then dequantize."""
+    if bits == 4:
+        codes = unpack_int4_ref(codes)
+    return dequantize_ref(codes, scale, group, dtype=dtype)
+
+
 # ---------------------------------------------------------------------------
 # Hadamard transform (orthonormal; D power of two)
 # ---------------------------------------------------------------------------

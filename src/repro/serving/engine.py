@@ -138,6 +138,7 @@ class DisaggregatedEngine:
         # ---- prefill worker ----
         t0 = time.perf_counter()
         logits, caches = self._pre(self.params, {"tokens": tokens})
+        # lint: sync-ok(one-shot engine times real prefill wall-clock here)
         jax.block_until_ready(logits)
         t_prefill = time.perf_counter() - t0
         first = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)

@@ -339,6 +339,7 @@ class PrefillWorker:
         pre1 = self._prefill_fn()
         t0 = time.perf_counter()
         logits, caches = pre1(self.model.params, {"tokens": tokens[None, :]})
+        # lint: sync-ok(measures real prefill wall-clock for the EWMA model)
         jax.block_until_ready(logits)
         t_wall = time.perf_counter() - t0
         t_prefill = (req.ctx_tokens / self.cfg.prefill_tok_s
@@ -347,6 +348,7 @@ class PrefillWorker:
         self.busy_seconds += t_prefill
         self._ewma_prefill = t_wall if self._ewma_prefill is None \
             else 0.7 * self._ewma_prefill + 0.3 * t_wall
+        # lint: sync-ok(one first-token pull per prefill seeds the decode slot)
         first = int(np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))[0])
         return caches, first, t_prefill
 
@@ -569,7 +571,8 @@ class DecodeWorker:
                 self.model.params, self._arena,
                 jnp.asarray(self._last_tok[:, None]),
                 jnp.asarray(self._positions), jnp.asarray(mask))
-        nxt = np.asarray(nxt)        # the step's single host sync
+        # lint: sync-ok(the step's single sanctioned sync - one batched pull)
+        nxt = np.asarray(nxt)
         wall = time.perf_counter() - t0
         for slot in active:
             t = int(nxt[slot.idx])

@@ -21,9 +21,7 @@ def test_quant_pack_matches_ref(bits, t, d, group, dtype):
     x = jnp.asarray(rng.standard_normal((t, d)) * 4, dtype)
     codes, scales = quant_pack_op(x, bits=bits, group=group,
                                   block_tokens=min(128, t))
-    cref, sref = K.quantize_ref(x.astype(jnp.float32), bits, group)
-    if bits == 4:
-        cref = K.pack_int4_ref(cref)
+    cref, sref = K.quant_pack_ref(x.astype(jnp.float32), bits, group)
     got, want = np.asarray(codes), np.asarray(cref)
     if dtype == jnp.float32:
         np.testing.assert_array_equal(got, want)
@@ -39,6 +37,22 @@ def test_quant_pack_matches_ref(bits, t, d, group, dtype):
         assert (diff != 0).mean() < (1e-2 if bits == 4 else 1e-3)
     np.testing.assert_allclose(np.asarray(scales), np.asarray(sref),
                                rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_dequant_unpack_matches_ref(bits, out_dtype):
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.standard_normal((128, 64)) * 3, jnp.float32)
+    codes, scales = K.quant_pack_ref(x, bits, 32)
+    got = dequant_unpack_op(codes, scales, bits=bits, group=32,
+                            out_dtype=out_dtype)
+    want = K.dequant_unpack_ref(codes, scales, bits, 32, dtype=out_dtype)
+    assert got.dtype == want.dtype == out_dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2 if out_dtype == jnp.bfloat16 else 1e-6,
+                               atol=1e-6)
 
 
 @pytest.mark.parametrize("bits", [4, 8])
@@ -225,16 +239,16 @@ def _paged_pools(k, v, bits, group, page_size, rng):
     (3, 1, 2, 128, 512, 128, 64),
 ])
 def test_paged_attention_matches_ref(bits, b, hkv, gq, d, s, group, ps):
-    from repro.kernels.paged_attention import paged_attention
-
     rng = np.random.default_rng(bits * 31 + s + ps)
     q = jnp.asarray(rng.standard_normal((b, hkv, gq, d)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
     (pools, bt, dense) = _paged_pools(k, v, bits, group, ps, rng)
     kv_lens = jnp.asarray([s, max(s // 2 - 3, 1), 1][:b], jnp.int32)
-    out = paged_attention(q, *pools, bt, kv_lens, bits=bits, group=group,
-                          interpret=True)
+    # the PUBLIC jitted wrapper, not the raw kernel: parity covers the
+    # op surface the serving stack actually calls
+    out = K.paged_attention_op(q, *pools, bt, kv_lens, bits=bits,
+                               group=group, interpret=True)
     ref = K.paged_attention_ref(q, *pools, bt, kv_lens, bits=bits,
                                 group=group)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
