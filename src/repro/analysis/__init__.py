@@ -1,9 +1,9 @@
 """Domain-specific static analysis for the repro serving stack.
 
-Four repo-specific checkers (DESIGN.md §13) run over the source tree and
-fail CI on any unsuppressed finding::
+Six repo-specific checkers (DESIGN.md §13/§14) run over the source tree
+and fail CI on any unsuppressed finding::
 
-    python -m repro.analysis [--format=json] [paths...]
+    python -m repro.analysis [--format=json] [--baseline=prev.json] [paths...]
 
 Rules
 -----
@@ -13,13 +13,33 @@ Rules
 * ``units``           — bytes / seconds / bytes-per-second / token mixing
 * ``kernel-contract`` — Pallas kernel <-> ref.py oracle <-> parity-test
                          correspondence
+* ``ownership``       — worker-local vs cluster-shared object discipline:
+                         shared-object mutation outside owner methods,
+                         MOVE-shaped ops on shared tiers, unordered
+                         iteration feeding routing/eviction decisions
+* ``determinism``     — replay safety of the simulator + workloads:
+                         wall-clock calls, unseeded/global RNG, id()
+                         ordering, stateful jitter
+
+The runtime counterpart of ``ownership`` lives in
+:mod:`repro.analysis.sanitize`: an installable KV sanitizer
+(``REPRO_SANITIZE=1``) that catches double-release / use-after-release
+of arena pages, pages leaked at drain, and shared-tier clobbers while
+the tier-1 suite runs.
 
 Intentional patterns are documented (not silenced) inline with
 ``# lint: <token>(reason)`` — see repro.analysis.core.
 """
 from __future__ import annotations
 
-from repro.analysis import clock, host_sync, kernel_contract, units
+from repro.analysis import (
+    clock,
+    determinism,
+    host_sync,
+    kernel_contract,
+    ownership,
+    units,
+)
 from repro.analysis.cli import main, run_paths
 from repro.analysis.core import Finding, Project, Rule, load_project
 
@@ -32,6 +52,12 @@ ALL_RULES = [
          "arithmetic mixing incompatible dimensions", units.check),
     Rule(kernel_contract.RULE_ID, kernel_contract.TOKEN,
          "kernel/oracle/parity-test drift", kernel_contract.check),
+    Rule(ownership.RULE_ID, ownership.TOKEN,
+         "cluster-shared object mutated/moved outside its owner",
+         ownership.check),
+    Rule(determinism.RULE_ID, determinism.TOKEN,
+         "replay-unsafe construct in the simulator/workload path",
+         determinism.check),
 ]
 
 __all__ = ["ALL_RULES", "Finding", "Project", "Rule", "load_project",

@@ -51,25 +51,56 @@ def run_paths(paths: Sequence[str], base: Optional[Path] = None
     return open_, closed
 
 
+def _finding_key(f) -> Tuple[str, str, str]:
+    """Identity of a finding across runs: line numbers shift with
+    unrelated edits, so the diff matches on (rule, path, message)."""
+    rule = f.rule if hasattr(f, "rule") else f["rule"]
+    path = f.path if hasattr(f, "path") else f["path"]
+    message = f.message if hasattr(f, "message") else f["message"]
+    return (rule, path, message)
+
+
+def diff_baseline(open_: List[Finding], baseline_path: str
+                  ) -> Tuple[List[Finding], int]:
+    """Split the open findings against a previous ``--format=json``
+    report.  Returns ``(new_findings, resolved_count)``: findings absent
+    from the baseline, and baseline findings no longer present."""
+    payload = json.loads(Path(baseline_path).read_text())
+    known = {_finding_key(f) for f in payload.get("findings", [])}
+    new = [f for f in open_ if _finding_key(f) not in known]
+    resolved = len(known - {_finding_key(f) for f in open_})
+    return new, resolved
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="repo-specific static analysis "
-                    "(host-sync, clock-accounting, units, kernel-contract)")
+                    "(host-sync, clock-accounting, units, kernel-contract, "
+                    "ownership, determinism)")
     ap.add_argument("paths", nargs="*", default=["src"],
                     help="files/directories to scan (default: src)")
     ap.add_argument("--format", choices=("text", "json"), default="text")
     ap.add_argument("--show-suppressed", action="store_true",
                     help="also print documented (suppressed) findings")
+    ap.add_argument("--baseline", metavar="JSON",
+                    help="previous --format=json report: only findings "
+                         "NOT in it are reported/counted (diff mode); "
+                         "exit 0 when no new findings")
     args = ap.parse_args(argv)
 
     open_, closed = run_paths(args.paths)
+    resolved = None
+    if args.baseline:
+        open_, resolved = diff_baseline(open_, args.baseline)
     if args.format == "json":
         payload = {
             "findings": [f.to_json() for f in open_],
             "suppressed": [f.to_json() for f in closed],
             "counts": {"open": len(open_), "suppressed": len(closed)},
         }
+        if resolved is not None:
+            payload["baseline"] = {"new": len(open_), "resolved": resolved}
         print(json.dumps(payload, indent=1, sort_keys=True))
     else:
         for f in open_:
@@ -77,6 +108,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         if args.show_suppressed:
             for f in closed:
                 print(f.render())
-        print(f"# {len(open_)} finding(s), {len(closed)} suppressed",
-              file=sys.stderr)
+        if resolved is not None:
+            print(f"# {len(open_)} new finding(s) vs baseline "
+                  f"({resolved} resolved), {len(closed)} suppressed",
+                  file=sys.stderr)
+        else:
+            print(f"# {len(open_)} finding(s), {len(closed)} suppressed",
+                  file=sys.stderr)
     return 1 if open_ else 0

@@ -11,7 +11,9 @@ Mechanics
 ---------
 * **Hot roots**: defs named ``step``/``run``/``serve``/
   ``decode_iteration``/``prefill`` (or ``_run_*``) in modules under a
-  ``serving`` directory.
+  ``serving`` directory, plus ``replay*`` defs under ``workloads/``
+  (the trace-replay loops step the runtime per event and are just as
+  hot).
 * **Reachability**: a name-based call graph over the scanned ``repro``
   sources (tests and benchmarks are excluded — they are offline by
   definition).  Over-approximate on purpose: a bare-name match is an
@@ -116,9 +118,11 @@ class _Index:
 def _reachable(index: _Index, files: List[SourceFile]
                ) -> List[Tuple[SourceFile, ast.FunctionDef]]:
     roots = [
-        (f, fn) for f in files if f.in_dir("serving")
+        (f, fn) for f in files
         for fn in func_defs(f.tree)
-        if fn.name in ROOT_NAMES or fn.name.startswith("_run")]
+        if (f.in_dir("serving")
+            and (fn.name in ROOT_NAMES or fn.name.startswith("_run")))
+        or (f.in_dir("workloads") and fn.name.startswith("replay"))]
     seen: Set[Tuple[str, int]] = set()
     work = list(roots)
     out: List[Tuple[SourceFile, ast.FunctionDef]] = []

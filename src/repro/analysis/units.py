@@ -21,7 +21,8 @@ Division and multiplication are the sanctioned conversions
 that match no convention stay untagged and never flag — the rule is
 deliberately low-noise.
 
-Scope: ``serving/`` and ``controller/``.  Suppression token: ``units-ok``.
+Scope: ``serving/`` (incl. the simulator), ``controller/``,
+``workloads/`` and ``distribution/``.  Suppression token: ``units-ok``.
 """
 from __future__ import annotations
 
@@ -85,7 +86,8 @@ def _call_tag(name: str) -> Optional[str]:
 
 
 def _in_scope(f: SourceFile) -> bool:
-    return (f.in_dir("serving") or f.in_dir("controller")) \
+    return (f.in_dir("serving") or f.in_dir("controller")
+            or f.in_dir("workloads") or f.in_dir("distribution")) \
         and not f.in_dir("tests")
 
 

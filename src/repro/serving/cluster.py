@@ -302,6 +302,7 @@ class ClusterRuntime:
 
     @model_cfg.setter
     def model_cfg(self, value):
+        # lint: own-ok(facade model swap is cluster-wide BY DESIGN - the shared handle is how it reaches every worker)
         self._model.cfg = value
 
     @property
@@ -310,6 +311,7 @@ class ClusterRuntime:
 
     @params.setter
     def params(self, value):
+        # lint: own-ok(facade param swap is cluster-wide BY DESIGN - tests pin the reference model through it)
         self._model.params = value
 
     @property

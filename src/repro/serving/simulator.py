@@ -14,6 +14,11 @@ exceeds its deadline estimate).
 The policy object decides the compression profile per request from the
 *estimated* goodput (EWMA over observed transfers), reproducing the
 offline→online drift the residual bandit corrects.
+
+Replay invariant: a run is a pure function of (config, seed) — no wall
+clock, no global RNG state, no identity-based ordering.  The
+``determinism`` static rule (DESIGN.md §13) enforces this mechanically
+over this module, ``network.py`` and ``workloads/``.
 """
 from __future__ import annotations
 

@@ -16,6 +16,11 @@ One trace, two execution granularities (DESIGN.md §11):
 
 Both adapters are deterministic given the trace: replaying the same trace
 twice yields identical results.
+
+The replay loops are serving hot paths: the ``host-sync`` static rule
+(DESIGN.md §13) treats every ``replay*`` def here as a hot root, so a
+stray device->host sync added to an adapter fails the lint gate the
+same way one in ``decode_iteration`` would.
 """
 from __future__ import annotations
 

@@ -10,6 +10,20 @@ import pytest
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _kv_sanitizer():
+    """REPRO_SANITIZE=1 runs the whole suite with the runtime KV
+    sanitizer installed (DESIGN.md §14): use-after-release,
+    double-release, drain leaks and shared-tier clobbers fail loudly
+    instead of surfacing as silent cross-request KV corruption.  CI runs
+    the tier-1 suite once this way; local default is uninstrumented."""
+    from repro.analysis import sanitize
+    installed = sanitize.install_from_env()
+    yield
+    if installed:
+        sanitize.uninstall()
+
+
 @pytest.fixture(scope="session")
 def kv_sample():
     from repro.core import KVCache

@@ -162,6 +162,96 @@ def test_foo_parity():
     assert foo_op is not None and foo_ref is not None
 """
 
+# ---------------------------------------------------------------------------
+# ownership
+# ---------------------------------------------------------------------------
+OWN_BAD = """\
+class PoolRuntime:
+    def __init__(self, spec):
+        self.scheduler = ContinuousScheduler()
+        self._shared_remote = KVTier(spec)
+        self._shared_remote.shared = True
+
+    def rebind(self):
+        self.scheduler = ContinuousScheduler()   # other holders keep old
+
+    def poke(self):
+        self.scheduler._queue.append(1)          # bypasses the owner API
+
+    def promote(self, hit):
+        return hit.tier.store._entries.pop(hit.key)   # MOVE, unguarded
+
+    def choose_worker(self, routes):
+        for r in set(routes):                    # hash-order decision
+            return r
+"""
+
+OWN_CLEAN = """\
+from dataclasses import replace
+
+
+class PoolRuntime:
+    def __init__(self, spec):
+        self.scheduler = ContinuousScheduler()
+        self._shared_remote = KVTier(spec)
+        self._shared_remote.shared = True        # construction site: owner
+        self.tiers = [KVTier(spec), self._shared_remote]
+
+    def promote(self, hit):
+        if hit.tier.shared:
+            return replace(hit.entry)            # COPY out of the pool
+        return hit.tier.store._entries.pop(hit.key)   # proven local
+
+    def refresh(self, key):
+        for t in self.tiers:
+            if t.shared:
+                continue                         # never clobber the pool
+            t.store.discard(key)
+
+    def choose_worker(self, routes):
+        return min(routes, key=lambda r: r.index)    # stable field
+"""
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+DET_BAD = """\
+import random
+import time
+
+import numpy as np
+
+
+def _run_events(cfg):
+    t0 = time.perf_counter()                 # wall clock in virtual time
+    rng = np.random.default_rng()            # entropy-seeded
+    jit = np.random.normal()                 # legacy global-state API
+    x = random.random()                      # stdlib module RNG
+    order = sorted(cfg.nodes, key=id)        # allocation-address order
+    return t0, rng, jit, x, order
+
+
+class Trace:
+    def _jitter(self, start, nbytes):
+        return 1.0 + 0.05 * self.rng.normal()    # long-lived generator
+"""
+
+DET_CLEAN = """\
+import numpy as np
+
+
+def _run_events(cfg, now):
+    rng = np.random.default_rng(cfg.seed)
+    order = sorted(cfg.nodes, key=lambda n: n.nid)
+    draw = rng.standard_normal()
+    return now + draw, order
+
+
+def _jitter_mult(seed, start, nbytes):
+    rng = np.random.default_rng((seed * 1000003) ^ nbytes)
+    return 1.0 + 0.05 * rng.standard_normal()
+"""
+
 FIXTURES = {
     "host-sync": [
         (True, {"serving/engine.py": SYNC_BAD}),
@@ -187,6 +277,14 @@ FIXTURES = {
                  "src/pkg/kernels/ref.py": KC_REF_OK,
                  "src/pkg/kernels/ops.py": KC_OPS_OK,
                  "tests/test_foo.py": KC_TEST_OK}),
+    ],
+    "ownership": [
+        (True, {"serving/cluster.py": OWN_BAD}),
+        (False, {"serving/cluster.py": OWN_CLEAN}),
+    ],
+    "determinism": [
+        (True, {"serving/simulator.py": DET_BAD}),
+        (False, {"serving/simulator.py": DET_CLEAN}),
     ],
 }
 
@@ -296,6 +394,41 @@ def test_cli_json_and_exit_codes(tmp_path, capsys, monkeypatch):
     rc = main(["--format=json", "serving"])
     payload = json.loads(capsys.readouterr().out)
     assert rc == 0 and payload["counts"]["open"] == 0
+
+
+def test_cli_baseline_diff(tmp_path, capsys, monkeypatch):
+    """--baseline diffs against a prior json report: pre-existing
+    findings don't fail the run, new ones do, fixed ones count as
+    resolved.  Identity is (rule, path, message) — line-number drift
+    from unrelated edits must not resurrect old findings."""
+    _write(tmp_path, {"serving/engine.py": SYNC_BAD})
+    monkeypatch.chdir(tmp_path)
+    main(["--format=json", "serving"])
+    (tmp_path / "base.json").write_text(capsys.readouterr().out)
+
+    # same tree vs its own report: green
+    rc = main(["--format=json", "--baseline", "base.json", "serving"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert payload["baseline"] == {"new": 0, "resolved": 0}
+
+    # a NEW bug on top of the known ones: only it is reported, run fails
+    _write(tmp_path, {"serving/engine.py": SYNC_BAD +
+                      "\ndef run(state):\n"
+                      "    jax.block_until_ready(state)\n"})
+    rc = main(["--format=json", "--baseline", "base.json", "serving"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["baseline"]["new"] == len(payload["findings"]) == 1
+    assert "run()" in payload["findings"][0]["message"]
+
+    # everything fixed: green again, baseline findings counted resolved
+    _write(tmp_path, {"serving/engine.py": SYNC_CLEAN})
+    rc = main(["--format=json", "--baseline", "base.json", "serving"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert payload["baseline"]["new"] == 0
+    assert payload["baseline"]["resolved"] >= 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,162 @@
+"""repro.analysis.sanitize: fault-injection coverage (DESIGN.md §14).
+
+Each test seeds one of the three runtime bug classes the sanitizer
+exists to catch — double-release / use-after-release of arena pages,
+pages leaked at drain, a MOVE-shaped clobber of a cluster-shared tier —
+and asserts the matching detector fires with its ``kind`` tag.  The
+clean lifecycles (slot reuse, COPY-promotion out of a shared pool,
+refresh skipping the shared tier) must stay silent: a sanitizer that
+cries on correct code would never be left on in CI.
+"""
+import pytest
+
+from repro.analysis import sanitize
+from repro.core.kvcache import PageTable
+from repro.serving.kvstore import KVTier, TierSpec, TieredKVStore
+
+KEY = tuple(range(16))
+
+
+@pytest.fixture
+def san():
+    """Force-install the sanitizer for one test (idempotent wrt the
+    session-level REPRO_SANITIZE=1 install in conftest)."""
+    was = sanitize.enabled()
+    sanitize.install()
+    yield sanitize
+    if not was:
+        sanitize.uninstall()
+
+
+def _shared_tiered(san):
+    """A worker hierarchy ending in a cluster-shared pool tier, with one
+    entry resident in the pool."""
+    shared = KVTier(TierSpec("remote", 1 << 20), block=16)
+    shared.shared = True
+    ts = TieredKVStore([TierSpec("hbm", 1 << 20), shared], block=16)
+    assert ts.put(KEY, "payload", 100, now=0.0, tier=1) == 1
+    return ts
+
+
+# ---------------------------------------------------------------------------
+# double-release / use-after-release
+# ---------------------------------------------------------------------------
+def test_double_release_caught(san):
+    pt = PageTable(8, 16)
+    pt.ensure(3, 32)
+    pt.release(3)
+    with pytest.raises(san.SanitizerError) as ei:
+        pt.release(3)
+    assert ei.value.kind == "double-release"
+
+
+def test_use_after_release_caught(san):
+    pt = PageTable(8, 16)
+    pt.ensure(2, 16)
+    pt.release(2)
+    with pytest.raises(san.SanitizerError) as ei:
+        pt.block_row(2, 4)
+    assert ei.value.kind == "use-after-release"
+
+
+def test_slot_reuse_is_clean(san):
+    """The runtime's normal recycle (release -> re-ensure -> read) must
+    not trip either page detector."""
+    pt = PageTable(8, 16)
+    for _ in range(3):
+        pt.ensure(1, 32)
+        assert pt.block_row(1, 4)[0] != 0
+        pt.release(1)
+    pt.ensure(1, 16)
+    pt.block_row(1, 4)
+    pt.check()
+
+
+# ---------------------------------------------------------------------------
+# pages leaked at drain
+# ---------------------------------------------------------------------------
+def test_leaked_pages_at_drain_caught(san):
+    """Seeded bug: a release path frees the slot id but skips
+    page_table.release() — the slot's pages stay owned forever."""
+    pt = PageTable(8, 16)
+    pt.ensure(0 + 1, 48)           # slot 1 holds 3 pages
+    # ... the slot is "freed" without releasing its pages (the bug) ...
+    with pytest.raises(san.SanitizerError) as ei:
+        san.check_drained(pt)
+    assert ei.value.kind == "leaked-pages"
+    assert "slot 1" in str(ei.value)
+
+
+def test_drain_check_respects_live_slots(san):
+    pt = PageTable(8, 16)
+    pt.ensure(1, 16)
+    san.check_drained(pt, live_slots=[1])     # still in flight: fine
+    pt.release(1)
+    san.check_drained(pt)                     # fully drained: fine
+
+
+# ---------------------------------------------------------------------------
+# shared-tier clobber
+# ---------------------------------------------------------------------------
+def test_shared_tier_clobber_caught(san):
+    """The PR-5 MOVE bug, seeded: code discards the pool copy while
+    'moving' an entry into its local tier."""
+    ts = _shared_tiered(san)
+    with pytest.raises(san.SanitizerError) as ei:
+        ts.tiers[1].store.discard(KEY)
+    assert ei.value.kind == "shared-clobber"
+
+
+def test_copy_promotion_out_of_shared_tier_is_clean(san):
+    """The CORRECT promotion path (COPY via dataclasses.replace) never
+    touches discard on the shared store — and the pool copy survives."""
+    ts = _shared_tiered(san)
+    hit = ts.lookup(KEY, now=1.0)
+    assert hit is not None and hit.tier.shared
+    ts.fetch(hit, ready=1.0)                          # promotes by COPY
+    assert ts.tiers[1].store.contains(KEY, now=1.0)   # pool copy intact
+    assert ts.tiers[0].store.contains(KEY, now=1.0)   # hot copy landed
+    assert ts.stats.promotions == 1
+
+
+def test_local_refresh_skips_shared_tier(san):
+    """put() pre-clobbers only worker-LOCAL stale copies; the shared
+    tier's copy is left for the whole cluster (the second PR-5 bug)."""
+    ts = _shared_tiered(san)
+    ts.put(KEY, "refresh", 120, now=2.0)              # must not raise
+    assert ts.tiers[1].store.contains(KEY, now=2.0)
+
+
+def test_guard_follows_store_swap(san):
+    """Flagging shared FIRST and swapping the store afterwards (the
+    wrap_flat construction order) still arms the guard."""
+    tier = KVTier(TierSpec("remote", 1 << 20), block=16)
+    tier.shared = True
+    from repro.serving.kvstore import PrefixKVStore
+    tier.store = PrefixKVStore(1 << 20, block=16)
+    tier.store.put(KEY, "p", 10)
+    with pytest.raises(san.SanitizerError):
+        tier.store.discard(KEY)
+
+
+# ---------------------------------------------------------------------------
+# install/uninstall contract
+# ---------------------------------------------------------------------------
+def test_uninstall_restores_originals():
+    was = sanitize.enabled()
+    sanitize.install()
+    if not was:
+        sanitize.uninstall()
+        pt = PageTable(8, 16)
+        pt.ensure(1, 16)
+        pt.release(1)
+        assert pt.release(1) == 0      # original silent behaviour is back
+    else:
+        # session runs sanitized (REPRO_SANITIZE=1): leave it installed
+        assert sanitize.enabled()
+
+
+def test_install_is_idempotent(san):
+    before = sanitize._orig["PageTable.release"]
+    sanitize.install()
+    assert sanitize._orig["PageTable.release"] is before
