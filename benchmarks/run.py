@@ -35,6 +35,7 @@ SUITES = [
     ("serving_sim_speed", "benchmarks.sim_speed"),
     ("serving_trace_grid", "benchmarks.trace_grid"),
     ("serving_paged_arena", "benchmarks.paged_arena"),
+    ("serving_speculative_decode", "benchmarks.speculative_decode"),
     ("kernels", "benchmarks.kernel_throughput"),
     ("roofline", "benchmarks.roofline"),
 ]

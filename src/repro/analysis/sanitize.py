@@ -9,9 +9,11 @@ it wraps:
 
 * :class:`~repro.core.kvcache.PageTable` — **double-release** (a slot's
   pages returned to the free pool twice, so a later ``ensure`` can hand
-  the same page to two slots) and **use-after-release**
-  (``block_row()`` on a released slot: the decode kernel would read
-  scratch/garbage pages).
+  the same page to two slots; both the full ``release()`` and the
+  speculative-rollback ``release_tail()`` are guarded, the latter at
+  page granularity so legal partial rollbacks stay silent) and
+  **use-after-release** (``block_row()`` on a released slot: the decode
+  kernel would read scratch/garbage pages).
 * :class:`~repro.serving.kvstore.PrefixKVStore` (via its owning
   :class:`~repro.serving.kvstore.KVTier`) — **shared-tier clobber**:
   ``discard()`` on a cluster-shared tier's store.  A shared tier's
@@ -110,6 +112,26 @@ def _pt_release(self, slot: int) -> int:
     return _orig["PageTable.release"](self, slot)
 
 
+def _pt_release_tail(self, slot: int, n_tokens: int):
+    # Speculative rollback (DESIGN.md §15) is a LEGAL partial release:
+    # the slot stays live with its committed prefix and only the
+    # rejected draft tail returns to the free pool, so it must not feed
+    # the slot-level released set above.  The page-level hazard is a
+    # rollback path freeing pages the slot no longer owns — the same
+    # physical page landing in the free pool twice, double-grantable by
+    # two later ensure() calls.
+    owned = self.pages.get(slot, [])
+    tail = owned[self.pages_for(n_tokens):]
+    dup = sorted(set(tail) & set(self.free))
+    if dup:
+        raise SanitizerError(
+            "double-release",
+            f"speculative rollback on slot {slot} frees page(s) {dup} "
+            f"that are already in the free pool — a rollback path "
+            f"returned the tail twice")
+    return _orig["PageTable.release_tail"](self, slot, n_tokens)
+
+
 def _pt_block_row(self, slot: int, row_len: int):
     if slot in _released_set(self) and slot not in self.pages:
         raise SanitizerError(
@@ -177,6 +199,7 @@ def install() -> None:
 
     _orig["PageTable.ensure"] = PageTable.ensure
     _orig["PageTable.release"] = PageTable.release
+    _orig["PageTable.release_tail"] = PageTable.release_tail
     _orig["PageTable.block_row"] = PageTable.block_row
     _orig["KVTier.__setattr__"] = KVTier.__setattr__
     _orig["PrefixKVStore.discard"] = PrefixKVStore.discard
@@ -185,6 +208,7 @@ def install() -> None:
 
     PageTable.ensure = _pt_ensure
     PageTable.release = _pt_release
+    PageTable.release_tail = _pt_release_tail
     PageTable.block_row = _pt_block_row
     KVTier.__setattr__ = _kvtier_setattr
     PrefixKVStore.discard = _store_discard
@@ -209,6 +233,7 @@ def uninstall() -> None:
 
     PageTable.ensure = _orig.pop("PageTable.ensure")
     PageTable.release = _orig.pop("PageTable.release")
+    PageTable.release_tail = _orig.pop("PageTable.release_tail")
     PageTable.block_row = _orig.pop("PageTable.block_row")
     KVTier.__setattr__ = _orig.pop("KVTier.__setattr__")
     PrefixKVStore.discard = _orig.pop("PrefixKVStore.discard")

@@ -14,9 +14,11 @@ from repro.controller.latency_model import (
     TierFetch,
     bandwidth_threshold,
     baseline_latency,
+    expected_tokens_per_step,
     is_beneficial,
     normalized_latency,
     predicted_latency,
+    speculative_decode_latency,
     tier_fetch_latency,
 )
 
@@ -25,6 +27,6 @@ __all__ = [
     "ServiceAwareController",
     "LowerEnvelope", "brute_force_optimal", "build_envelope",
     "ServiceContext", "TierFetch", "bandwidth_threshold", "baseline_latency",
-    "is_beneficial", "normalized_latency", "predicted_latency",
-    "tier_fetch_latency",
+    "expected_tokens_per_step", "is_beneficial", "normalized_latency",
+    "predicted_latency", "speculative_decode_latency", "tier_fetch_latency",
 ]

@@ -23,6 +23,7 @@ from repro.controller.latency_model import (
     baseline_latency,
     is_beneficial,
     predicted_latency,
+    speculative_decode_latency,
     tier_fetch_latency,
 )
 
@@ -40,6 +41,11 @@ class Decision:
     bucket: int
     predicted: float
     candidates: List[Profile] = field(default_factory=list)
+    # Speculation length for the request's decode (DESIGN.md §15): the
+    # draft budget k minimizing the modelled decode-stream time at the
+    # (workload, route) accept-rate estimate.  0 = plain decode; the
+    # runtime caps it at its own cfg.spec_k.
+    spec_k: int = 0
 
 
 @dataclass
@@ -59,11 +65,25 @@ class ServiceAwareController:
         bandit_config: BanditConfig = BanditConfig(),
         use_bandit: bool = True,
         use_envelope: bool = True,
+        spec_candidates: Sequence[int] = (0,),
+        spec_accept_prior: float = 0.5,
+        spec_accept_alpha: float = 0.2,
     ):
         self.buckets = buckets
         self.use_bandit = use_bandit
         self.use_envelope = use_envelope
         self._bandit_config = bandit_config
+        # Adaptive speculation length (DESIGN.md §15).  The candidate set
+        # defaults to (0,) — zero behavioural change for existing
+        # deployments; a runtime enabling spec_adaptive passes e.g.
+        # (0, 2, 4).  Accept rates are tracked per (workload, route) as an
+        # EWMA residual around the optimistic prior: routes drift
+        # independently (different hardware mixes repeat differently),
+        # exactly like the latency bandits above.
+        self.spec_candidates = tuple(spec_candidates)
+        self._spec_prior = spec_accept_prior
+        self._spec_alpha = spec_accept_alpha
+        self._accept_rates: Dict[Tuple[str, str], float] = {}
         # Per (workload, bucket): lower envelope built offline.  Envelopes
         # are route-independent (profiles are an offline property); bandit
         # state is NOT — see _bandit_for.
@@ -123,19 +143,22 @@ class ServiceAwareController:
 
     def select(self, ctx: ServiceContext) -> Decision:
         bucket = self._bucket_of(ctx.q_min)
+        spec_k = self._choose_spec_k(ctx)
         env = self._envelopes.get((ctx.workload, bucket))
         if env is None or not env.lines:
             # Identity fallback: predicted must be comparable with the
             # other branches' predicted_latency (t_model included), or the
             # bandit's residuals for this arm absorb the whole model time.
-            return Decision(IDENTITY_PROFILE, 0, bucket, baseline_latency(ctx))
+            return Decision(IDENTITY_PROFILE, 0, bucket,
+                            baseline_latency(ctx), spec_k=spec_k)
 
         x = 1.0 / max(ctx.bandwidth, 1e-9)
         if not self.use_envelope:
             # ablation: pick max-CR profile regardless of service state
             profs = [l.profile for l in env.lines]
             p = max(profs, key=lambda q: q.cr)
-            return Decision(p, 0, bucket, predicted_latency(p, ctx), [p])
+            return Decision(p, 0, bucket, predicted_latency(p, ctx), [p],
+                            spec_k=spec_k)
 
         interval = env.optimal_index(x)
         candidates = self._eligible_candidates(env, x, ctx)
@@ -147,7 +170,47 @@ class ServiceAwareController:
             p = min(candidates, key=lambda q: predicted_latency(q, ctx))
 
         return Decision(p, interval, bucket, predicted_latency(p, ctx),
-                        candidates)
+                        candidates, spec_k=spec_k)
+
+    # ------------------------------------------------------------------
+    # Adaptive speculation length (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def accept_rate(self, workload: str, route: str) -> float:
+        """The controller's per-draft acceptance estimate for
+        (workload, route): the optimistic prior until the first
+        observation, then an EWMA of realized per-request accept rates."""
+        return self._accept_rates.get((workload, route), self._spec_prior)
+
+    def observe_accept(self, workload: str, route: str,
+                       rate: float) -> None:
+        """Feed one finished request's realized per-draft accept rate
+        (drafts_accepted / drafts_offered) back into the (workload,
+        route) EWMA — the accept-rate analogue of the latency bandit's
+        residual update.  The latency residuals themselves also see
+        speculative requests' realized JCTs per route, so systematic
+        accept mis-estimates are additionally absorbed there."""
+        rate = min(max(rate, 0.0), 1.0)
+        key = (workload, route)
+        prev = self._accept_rates.get(key)
+        self._accept_rates[key] = (rate if prev is None else
+                                   (1 - self._spec_alpha) * prev
+                                   + self._spec_alpha * rate)
+
+    def _choose_spec_k(self, ctx: ServiceContext) -> int:
+        """Pick the draft budget minimizing the modelled decode-stream
+        time over ``spec_candidates`` at the (workload, route) accept
+        estimate.  Ties break toward smaller k — at accept rate 0 the
+        model collapses every candidate to the baseline and k = 0 wins,
+        the required fall-back-to-plain-decode behaviour.  ``decode_time``
+        only scales the objective, so an unknown (0) decode time still
+        ranks candidates correctly — substitute 1s."""
+        cands = self.spec_candidates
+        if len(cands) <= 1:
+            return cands[0] if cands else 0
+        r = self.accept_rate(ctx.workload, ctx.route)
+        d = ctx.decode_time if ctx.decode_time > 0 else 1.0
+        return min(cands,
+                   key=lambda k: (speculative_decode_latency(d, k, r), k))
 
     # ------------------------------------------------------------------
     def select_fetch(self, ctx: ServiceContext,

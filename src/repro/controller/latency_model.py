@@ -41,6 +41,11 @@ class ServiceContext:
     # (DESIGN.md §12): paged-eligible profiles skip the materialized
     # decompress, so Eq. 1's s_eff term keeps only its encode half.
     fused_dec: bool = False
+    # Strategy-independent serial decode-stream time (out_tokens at the
+    # decode worker's per-token rate).  Speculative decoding divides it
+    # by the expected committed tokens per verify step (DESIGN.md §15);
+    # 0.0 when unknown (the k-selection then ranks on throughput alone).
+    decode_time: float = 0.0
 
 
 def predicted_latency(p: Profile, c: ServiceContext) -> float:
@@ -78,6 +83,35 @@ def normalized_latency(p: Profile, inv_bandwidth: float) -> float:
     """T̃_p(x) = 1/s_p + x/cr_p (Eq. 6)."""
     s_term = 0.0 if p.s_eff == float("inf") else 1.0 / p.s_eff
     return s_term + inv_bandwidth / p.cr
+
+
+# ---------------------------------------------------------------------------
+# Speculative-decode terms (DESIGN.md §15): the decode-stream analogue of
+# Eq. 1's transfer terms.  With draft budget k and per-draft acceptance
+# rate r, a greedy verify step commits 1 bonus token plus a geometric
+# accepted prefix.
+# ---------------------------------------------------------------------------
+def expected_tokens_per_step(k: int, accept_rate: float) -> float:
+    """E[committed tokens per verify step] = sum_{j=0..k} r^j — one bonus
+    token always commits; draft j commits iff all drafts before it did
+    (i.i.d. per-draft acceptance r).  k = 0 gives exactly 1.0, the plain
+    one-token decode."""
+    r = min(max(accept_rate, 0.0), 1.0)
+    return sum(r ** j for j in range(max(k, 0) + 1))
+
+
+def speculative_decode_latency(decode_time: float, k: int,
+                               accept_rate: float,
+                               verify_overhead: float = 0.0) -> float:
+    """Decode-stream time with k-draft speculation: the serial decode
+    time shrinks by the expected committed tokens per verify step, while
+    each (wider) verify step may carry a relative overhead
+    ``verify_overhead`` per draft slot.  Monotone pieces pull against
+    each other, so argmin over a candidate set is the k-selection rule
+    (the controller breaks latency ties toward smaller k — at
+    accept_rate 0 every k collapses to the baseline and k = 0 wins)."""
+    tps = expected_tokens_per_step(k, accept_rate)
+    return decode_time * (1.0 + verify_overhead * max(k, 0)) / tps
 
 
 # ---------------------------------------------------------------------------

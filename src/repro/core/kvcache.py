@@ -140,6 +140,22 @@ class PageTable:
         self.free.extend(owned)
         return len(owned)
 
+    def release_tail(self, slot: int, n_tokens: int) -> List[int]:
+        """Shrink ``slot`` to the pages covering ``n_tokens`` positions,
+        returning the freed page ids (often empty).  This is the
+        speculative-decode rollback: a verify step may have ensured pages
+        for ``k`` draft positions that were then rejected; the slot stays
+        live and keeps its committed prefix, only the rejected tail pages
+        go back to the free pool.  The freed pages need no scrubbing —
+        reads are capped at the committed position, so whatever draft KV
+        they hold is never attended to and is overwritten on reuse."""
+        owned = self.pages.get(slot, [])
+        keep = self.pages_for(n_tokens)
+        freed = owned[keep:]
+        del owned[keep:]
+        self.free.extend(freed)
+        return freed
+
     def block_row(self, slot: int, row_len: int) -> np.ndarray:
         """The slot's block-table row, padded with the scratch sentinel 0
         to ``row_len`` entries (row_len = ceil(max_len / page_size))."""

@@ -335,6 +335,81 @@ def _paged_steps(cfg_name: str, page_size: int):
     return jax.jit(arena), jax.jit(copy)
 
 
+@lru_cache(maxsize=16)
+def _paged_verify_steps(cfg_name: str, page_size: int, width: int):
+    """Jitted paged multi-token verify step (DESIGN.md §15).
+
+    ``verify(params, pool, qcodes, qscales, bt, quant_len, tokens, pos,
+    mask)`` is ``_paged_steps``'s arena decode widened to a ``(B, width)``
+    query block: each live slot feeds ``width`` tokens at consecutive
+    positions ``pos..pos+width-1`` and gets all ``width`` greedy argmax
+    outputs back for host-side accept-prefix matching.  All ``width`` K/V
+    rows are scattered to each slot's pages; positions beyond a slot's
+    *ensured* page span map to block-table entry 0 — the reserved scratch
+    page, which no live query ever reads — so slots verifying fewer than
+    ``width-1`` drafts need no masking: their surplus writes are inert by
+    construction.  Parked rows pin to ``view_len - width`` (scratch pages
+    again).  Rejected suffixes are rolled back by the caller via
+    ``PageTable.release_tail``; the pages themselves need no scrubbing
+    because reads are capped at each slot's committed ``pos``.
+    """
+    from repro.models import decode_step
+
+    cfg = get_config(cfg_name)
+
+    def verify(params, pool, qcodes, qscales, bt, quant_len, tokens, pos,
+               mask):
+        view_len = bt.shape[1] * page_size
+        pos = jnp.where(mask, pos, view_len - width).astype(jnp.int32)
+
+        def build(prefix):
+            def f(p, qc, qs):
+                return _blend_quant(_paged_view(p, bt, prefix),
+                                    _paged_view(qc, bt, prefix),
+                                    _paged_view(qs, bt, prefix),
+                                    quant_len, prefix)
+            return f
+
+        caches = {
+            "prefix": jax.tree_util.tree_map(
+                build(True), pool["prefix"], qcodes["prefix"],
+                qscales["prefix"]),
+            "blocks": jax.tree_util.tree_map(
+                build(False), pool["blocks"], qcodes["blocks"],
+                qscales["blocks"]),
+        }
+        logits, new_caches = decode_step(cfg, params, caches, tokens, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, width)
+
+        new_pool = pool
+        for j in range(width):
+            pj = pos + j
+            page_idx = jnp.take_along_axis(
+                bt, (pj // page_size)[:, None], axis=1)[:, 0]
+            offset = pj % page_size
+
+            def scat(prefix, pj=pj, page_idx=page_idx, offset=offset):
+                def f(p, nv):
+                    if prefix:
+                        row = jnp.take_along_axis(
+                            nv, pj[:, None, None, None], axis=1)[:, 0]
+                        return p.at[page_idx, offset].set(row.astype(p.dtype))
+                    row = jnp.take_along_axis(
+                        nv, pj[None, :, None, None, None], axis=2)[:, :, 0]
+                    return p.at[:, page_idx, offset].set(row.astype(p.dtype))
+                return f
+
+            new_pool = {
+                "prefix": jax.tree_util.tree_map(
+                    scat(True), new_pool["prefix"], new_caches["prefix"]),
+                "blocks": jax.tree_util.tree_map(
+                    scat(False), new_pool["blocks"], new_caches["blocks"]),
+            }
+        return jnp.where(mask[:, None], nxt, 0), new_pool
+
+    return jax.jit(verify)
+
+
 def copy_cache_slot_paged(cfg, pool, src, bt_row, page_size: int,
                           src_idx: int = 0):
     """Paged ``copy_cache_slot``: land one prefilled source row in the
@@ -446,6 +521,34 @@ def _jitted_steps(cfg_name: str, seq: int, batch: int, max_len: int):
         return jnp.where(mask, nxt, 0), c
 
     return pre, dec, jax.jit(_arena)
+
+
+@lru_cache(maxsize=16)
+def _verify_steps(cfg_name: str, max_len: int, width: int):
+    """Jitted dense multi-token verify step (DESIGN.md §15).
+
+    ``verify(params, caches, tokens, pos, mask)`` widens ``_jitted_steps``'s
+    arena decode to a ``(B, width)`` query block: each live slot feeds its
+    last committed token plus ``width-1`` draft tokens at consecutive
+    positions ``pos..pos+width-1`` and receives all ``width`` greedy argmax
+    outputs for host-side accept-prefix matching.  Parked rows pin to
+    ``max_len - width`` so every one of their ``width`` K/V row writes
+    stays in-bounds; the writes are inert because rows are per-slot and
+    reads are capped at each slot's committed position (``kv_valid``), so
+    garbage beyond ``pos`` — including rejected draft KV — is simply
+    overwritten by later steps and never attended to.
+    """
+    from repro.models import decode_step
+
+    cfg = get_config(cfg_name)
+
+    def _verify(p, c, t, pos, mask):
+        pos = jnp.where(mask, pos, max_len - width).astype(jnp.int32)
+        logits, c = decode_step(cfg, p, c, t, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, width)
+        return jnp.where(mask[:, None], nxt, 0), c
+
+    return jax.jit(_verify)
 
 
 def _prompts_for(workload: str, n: int, seq: int, seed: int

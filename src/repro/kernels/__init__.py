@@ -6,6 +6,8 @@
   decode_attention  — quantized flash-decode attention (int KV read)
   paged_attention   — block-table page gather + fused dequant decode
                       attention over the paged arena (DESIGN.md §12)
+  paged_verify_attention — multi-token speculative verify over paged KV
+                      (q-tile axis + staircase causal mask, DESIGN.md §15)
 
 Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling, a jit'd
 wrapper in ops.py, and a pure-jnp oracle in ref.py.
@@ -15,8 +17,10 @@ from repro.kernels.ops import (
     dequant_unpack_op,
     hadamard_op,
     paged_attention_op,
+    paged_verify_attention_op,
     quant_pack_op,
 )
 
 __all__ = ["decode_attention_op", "dequant_unpack_op", "hadamard_op",
-           "paged_attention_op", "quant_pack_op"]
+           "paged_attention_op", "paged_verify_attention_op",
+           "quant_pack_op"]

@@ -16,6 +16,9 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_attention
 from repro.kernels.hadamard import hadamard_transform as _hadamard
 from repro.kernels.paged_attention import paged_attention as _paged_attention
+from repro.kernels.paged_verify_attention import (
+    paged_verify_attention as _paged_verify_attention,
+)
 from repro.kernels.quant_pack import dequant_unpack as _dequant
 from repro.kernels.quant_pack import quant_pack as _quant
 
@@ -110,6 +113,33 @@ def paged_attention_op(q, k_codes, k_scale, v_codes, v_scale, block_tables,
                                 bits=bits, group=group, interpret=itp)
 
 
+@functools.partial(jax.jit, static_argnames=("bits", "group", "interpret"))
+def _paged_verify_attention_jit(q, k_codes, k_scale, v_codes, v_scale,
+                                block_tables, kv_lens, bits, group,
+                                interpret):
+    return _paged_verify_attention(q, k_codes, k_scale, v_codes, v_scale,
+                                   block_tables, kv_lens, bits=bits,
+                                   group=group, interpret=interpret)
+
+
+def paged_verify_attention_op(q, k_codes, k_scale, v_codes, v_scale,
+                              block_tables, kv_lens, bits: int = 8,
+                              group: int = 64,
+                              interpret: Optional[bool] = None):
+    """Paged multi-token verify attention (see paged_verify_attention.py).
+
+    ``q`` is (B, Hkv, W, Gq, D): W consecutive verify tokens per slot,
+    query ``j`` masked at ``kv_lens[b] + j`` — the speculative-decode
+    staircase.  Block table and lengths are traced, so page churn and
+    per-step accept lengths never recompile; only W itself is shape-
+    static (one compile per speculation width)."""
+    itp = _default_interpret() if interpret is None else interpret
+    return _paged_verify_attention_jit(q, k_codes, k_scale, v_codes, v_scale,
+                                       jnp.asarray(block_tables, jnp.int32),
+                                       jnp.asarray(kv_lens, jnp.int32),
+                                       bits=bits, group=group, interpret=itp)
+
+
 # Re-export oracles for test convenience.
 quant_pack_ref = ref.quant_pack_ref
 dequant_unpack_ref = ref.dequant_unpack_ref
@@ -118,5 +148,6 @@ dequantize_ref = ref.dequantize_ref
 hadamard_ref = ref.hadamard_ref
 decode_attention_ref = ref.decode_attention_ref
 paged_attention_ref = ref.paged_attention_ref
+paged_verify_attention_ref = ref.paged_verify_attention_ref
 pack_int4_ref = ref.pack_int4_ref
 unpack_int4_ref = ref.unpack_int4_ref

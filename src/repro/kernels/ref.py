@@ -117,6 +117,48 @@ def decode_attention_ref(
 # ---------------------------------------------------------------------------
 # Paged quantized decode attention (block-table gather + fused dequant)
 # ---------------------------------------------------------------------------
+def paged_verify_attention_ref(
+    q: jnp.ndarray,             # (B, Hkv, W, Gq, D)
+    k_codes: jnp.ndarray,       # (P, Hkv, PS, D) int8 or (P, Hkv, PS, D/2) u8
+    k_scale: jnp.ndarray,       # (P, Hkv, PS, D/group) f32
+    v_codes: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, PPS) int32 page ids; 0 = unmapped
+    kv_lens: jnp.ndarray,       # (B,) int32; query 0's visible length
+    bits: int,
+    group: int,
+) -> jnp.ndarray:
+    """Oracle for kernels/paged_verify_attention.py: the speculative
+    multi-token verify step.  Query ``j`` of slot ``b`` attends cache
+    positions ``< kv_lens[b] + j`` — the staircase causal mask over the
+    ``W`` consecutive verify positions (each new token's own scattered
+    KV row included, its successors excluded)."""
+    bt = jnp.asarray(block_tables, jnp.int32)
+    b, hkv, w, gq, d = q.shape
+
+    def gather(pool):
+        g = jnp.take(pool, bt, axis=0)       # (B, PPS, Hkv, PS, X)
+        g = jnp.moveaxis(g, 2, 1)            # (B, Hkv, PPS, PS, X)
+        return g.reshape(g.shape[0], g.shape[1], -1, g.shape[-1])
+
+    kc, ks = gather(k_codes), gather(k_scale)
+    vc, vs = gather(v_codes), gather(v_scale)
+    if bits == 4:
+        kc, vc = unpack_int4_ref(kc), unpack_int4_ref(vc)
+    k = dequantize_ref(kc, ks, group)        # (B, Hkv, S, D)
+    v = dequantize_ref(vc, vs, group)
+    s = k.shape[2]
+    scores = jnp.einsum("bhwgd,bhsd->bhwgs", q.astype(jnp.float32), k)
+    scores = scores / math.sqrt(d)
+    lens = jnp.asarray(kv_lens, jnp.int32)   # (B,)
+    limit = lens[:, None] + jnp.arange(w)[None, :]          # (B, W)
+    mask = jnp.arange(s)[None, None, :] < limit[..., None]  # (B, W, S)
+    scores = jnp.where(mask[:, None, :, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhwgs,bhsd->bhwgd", probs, v)
+    return out.astype(q.dtype)
+
+
 def paged_attention_ref(
     q: jnp.ndarray,             # (B, Hkv, Gq, D)
     k_codes: jnp.ndarray,       # (P, Hkv, PS, D) int8 or (P, Hkv, PS, D/2) u8

@@ -293,42 +293,68 @@ def apply_attention(
             )
             new_cache = {"k": k, "v": v}
         else:
-            # Decode: the cache is READ-ONLY here; the new token's (k, v)
-            # merges in closed form via online-softmax statistics, and the
+            # Decode: the cache is READ-ONLY here; the new tokens' (k, v)
+            # merge in closed form via online-softmax statistics, and the
             # cache update happens once, post-scan, as a single stacked
             # dynamic-update-slice (EXPERIMENTS.md §Perf hillclimb #3 —
             # rewriting the cache through scan ys churned full-cache copies
-            # every block iteration).
-            assert s == 1, "decode path expects one new token"
+            # every block iteration).  s == 1 is the plain decode step;
+            # s > 1 is the speculative multi-token verify step, where the
+            # s new tokens sit at consecutive positions cache_pos..+s-1 and
+            # attend to each other under an intra-block causal mask.
             hkv = k.shape[2]
             g = cfg.num_heads // cfg.kv_heads
             smax = cache["k"].shape[1]
             k_pos = jnp.arange(smax, dtype=jnp.int32)
+            offs = jnp.arange(s, dtype=jnp.int32)
             if jnp.ndim(cache_pos) == 1:
                 # Slot-arena decode: every row sits at its own position.
-                q_pos = cache_pos.astype(jnp.int32)[:, None]  # (B, 1)
+                q_pos = cache_pos.astype(jnp.int32)[:, None] + offs[None, :]
             else:
-                q_pos = jnp.full((s,), cache_pos, dtype=jnp.int32)
+                q_pos = jnp.asarray(cache_pos, jnp.int32) + offs  # (S,)
             out_old, m_old, l_old = multihead_attention(
                 q, cache["k"], cache["v"], q_positions=q_pos,
                 k_positions=k_pos, causal=True, window=window,
                 softcap=cfg.attn_softcap, kv_valid=cache_pos,
                 return_stats=True,
-            )  # (b,h,g,1,dh), (b,h,g,1), (b,h,g,1)
-            qg = q.reshape(b, 1, hkv, g, hd)
+            )  # (b,h,g,S,dh), (b,h,g,S), (b,h,g,S)
+            qg = q.reshape(b, s, hkv, g, hd)
             scale = 1.0 / math.sqrt(hd)
-            s_new = jnp.einsum("bqhgd,bqhd->bhgq", qg.astype(COMPUTE_DTYPE),
-                               k.astype(COMPUTE_DTYPE)).astype(jnp.float32)
-            s_new = _softcap(s_new * scale, cfg.attn_softcap)
-            m_new = jnp.maximum(m_old, s_new)
-            alpha = jnp.exp(m_old - m_new)
-            p_new = jnp.exp(s_new - m_new)
-            v_b = v.reshape(b, 1, hkv, 1, hd).transpose(0, 2, 3, 1, 4)
-            num = (out_old.astype(jnp.float32) * alpha[..., None]
-                   + p_new[..., None] * v_b.astype(jnp.float32))
-            den = l_old * alpha + p_new
-            out = (num / jnp.maximum(den, 1e-30)[..., None])
-            out = jnp.moveaxis(out.astype(COMPUTE_DTYPE), 3, 1)  # (b,1,h,g,dh)
+            if s == 1:
+                s_new = jnp.einsum("bqhgd,bqhd->bhgq",
+                                   qg.astype(COMPUTE_DTYPE),
+                                   k.astype(COMPUTE_DTYPE)).astype(jnp.float32)
+                s_new = _softcap(s_new * scale, cfg.attn_softcap)
+                m_new = jnp.maximum(m_old, s_new)
+                alpha = jnp.exp(m_old - m_new)
+                p_new = jnp.exp(s_new - m_new)
+                v_b = v.reshape(b, 1, hkv, 1, hd).transpose(0, 2, 3, 1, 4)
+                num = (out_old.astype(jnp.float32) * alpha[..., None]
+                       + p_new[..., None] * v_b.astype(jnp.float32))
+                den = l_old * alpha + p_new
+                out = (num / jnp.maximum(den, 1e-30)[..., None])
+            else:
+                # Intra-block attention of the s new tokens over themselves:
+                # query row i sees new token j iff j <= i (positions are
+                # consecutive, so the sliding window reduces to j > i - w).
+                s_blk = jnp.einsum("bqhgd,bjhd->bhgqj",
+                                   qg.astype(COMPUTE_DTYPE),
+                                   k.astype(COMPUTE_DTYPE)).astype(jnp.float32)
+                s_blk = _softcap(s_blk * scale, cfg.attn_softcap)
+                blk_ok = offs[None, :] <= offs[:, None]           # (Sq, Sj)
+                if window and window > 0:
+                    blk_ok = blk_ok & (offs[None, :] > offs[:, None] - window)
+                s_blk = jnp.where(blk_ok[None, None, None], s_blk,
+                                  _mask_value())
+                m_new = jnp.maximum(m_old, s_blk.max(axis=-1))
+                alpha = jnp.exp(m_old - m_new)
+                p_blk = jnp.exp(s_blk - m_new[..., None])
+                pv = jnp.einsum("bhgqj,bjhd->bhgqd", p_blk,
+                                v.astype(jnp.float32))
+                num = out_old.astype(jnp.float32) * alpha[..., None] + pv
+                den = l_old * alpha + p_blk.sum(axis=-1)
+                out = num / jnp.maximum(den, 1e-30)[..., None]
+            out = jnp.moveaxis(out.astype(COMPUTE_DTYPE), 3, 1)  # (b,S,h,g,dh)
             out = out.reshape(b, s, hkv * g, hd)
             new_cache = {"k_new": k.astype(cache["k"].dtype),
                          "v_new": v.astype(cache["v"].dtype)}

@@ -267,7 +267,7 @@ def _merge_decode_updates(new_caches, caches, cache_pos):
     per_slot = jnp.ndim(cache_pos) == 1
 
     def _row_write(b_old, upd, p):
-        # b_old (S, H, D); upd (1, H, D); p scalar
+        # b_old (Smax, H, D); upd (S, H, D) — S consecutive rows from p
         return jax.lax.dynamic_update_slice(b_old, upd, (p,) + (0,) * (b_old.ndim - 1))
 
     def _merge(sub, old, stacked: bool):
@@ -427,9 +427,12 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int):
 
 
 def decode_step(cfg: ModelConfig, params, caches, tokens, pos):
-    """One decode step. tokens (B, 1); pos scalar int32 (next slot index),
+    """One decode step. tokens (B, S); pos scalar int32 (next slot index),
     or (B,) int32 for the batched slot arena, where every cache row sits at
-    its own position (ragged continuous-batching decode)."""
+    its own position (ragged continuous-batching decode).  S == 1 is the
+    plain step; S > 1 is the speculative multi-token verify step — the S
+    tokens occupy consecutive positions pos..pos+S-1 and the logits come
+    back for every position."""
     plan = plan_stack(cfg)
     xattn_kv = None
     if cfg.encoder_decoder:
@@ -438,14 +441,15 @@ def decode_step(cfg: ModelConfig, params, caches, tokens, pos):
     else:
         self_caches = caches
     x = L.embed_tokens(params["embed"], tokens).astype(COMPUTE_DTYPE)
-    bsz = x.shape[0]
+    bsz, s = x.shape[0], x.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
+    offs = jnp.arange(s, dtype=jnp.int32)
     if cfg.mrope:
-        positions = jnp.broadcast_to(
-            pos[None, :, None] if pos.ndim == 1 else pos, (3, bsz, 1))
+        base = pos[None, :, None] if pos.ndim == 1 else pos
+        positions = jnp.broadcast_to(base + offs[None, None, :], (3, bsz, s))
     else:
-        positions = (pos[:, None] if pos.ndim == 1
-                     else jnp.broadcast_to(pos, (bsz, 1)))
+        positions = ((pos[:, None] + offs[None, :]) if pos.ndim == 1
+                     else jnp.broadcast_to(pos + offs, (bsz, s)))
     x, new_caches, _ = _run_stack(params, cfg, plan, x, positions=positions,
                                   mode="decode", caches=self_caches,
                                   cache_pos=pos, xattn_kv=xattn_kv)

@@ -98,6 +98,43 @@ def class_latency_blocks(requests: Sequence,
     return out
 
 
+def speculation_stats(requests: Iterable,
+                      classes: Iterable[str] = ()) -> Dict[str, float]:
+    """Speculative-decode acceptance block (DESIGN.md §15), duck-typed on
+    ``verify_steps`` / ``spec_committed`` / ``drafts_offered`` /
+    ``drafts_accepted`` (requests without them — e.g. simulator records —
+    contribute nothing).  Emitted only when at least one request actually
+    took a verify step, so non-speculative summaries are unchanged:
+
+    * ``spec_tokens_per_step``       — committed tokens per verify step,
+      aggregated over all verify steps (the decode-throughput multiplier);
+    * ``spec_tokens_per_step_<cls>`` — the same per SLO class;
+    * ``spec_accept_rate``           — accepted / offered drafts.
+    """
+    steps = committed = offered = accepted = 0
+    by_cls: Dict[str, list] = {cls: [0, 0] for cls in classes}
+    for r in requests:
+        vs = int(getattr(r, "verify_steps", 0) or 0)
+        if vs <= 0:
+            continue
+        sc = int(getattr(r, "spec_committed", 0) or 0)
+        steps += vs
+        committed += sc
+        offered += int(getattr(r, "drafts_offered", 0) or 0)
+        accepted += int(getattr(r, "drafts_accepted", 0) or 0)
+        cls = by_cls.setdefault(getattr(r, "slo_class", "standard"), [0, 0])
+        cls[0] += vs
+        cls[1] += sc
+    if steps == 0:
+        return {}
+    out = {"spec_tokens_per_step": committed / steps}
+    if offered > 0:
+        out["spec_accept_rate"] = accepted / offered
+    for cls, (vs, sc) in sorted(by_cls.items()):
+        out[f"spec_tokens_per_step_{cls}"] = sc / vs if vs else None
+    return out
+
+
 def latency_summary(requests: Sequence,
                     classes: Optional[Iterable[str]] = None
                     ) -> Dict[str, float]:
@@ -105,11 +142,13 @@ def latency_summary(requests: Sequence,
     violation rates.  Pass ``classes`` (the SLO classes the run was
     *supposed* to serve) to additionally emit per-class tail blocks with
     explicit zero/None reporting for empty classes — see
-    :func:`class_latency_blocks`."""
+    :func:`class_latency_blocks`.  Runs with speculative decoding also
+    get the acceptance block of :func:`speculation_stats`."""
     out: Dict[str, float] = {}
     out.update(percentile_row([r.ttft for r in requests], "ttft"))
     out.update(percentile_row([r.jct for r in requests], "jct"))
     out.update(violation_rates(requests, classes or ()))
     if classes is not None:
         out.update(class_latency_blocks(requests, classes))
+    out.update(speculation_stats(requests, classes or ()))
     return out

@@ -31,7 +31,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.controller import Decision, ServiceAwareController, ServiceContext
-from repro.controller.latency_model import predicted_latency
+from repro.controller.latency_model import (
+    expected_tokens_per_step,
+    predicted_latency,
+)
 from repro.core.profiles import IDENTITY_PROFILE, Profile
 from repro.core.strategy import paged_eligible
 from repro.serving.kvstore import PrefixKVStore, StoreEntry, TieredKVStore
@@ -204,7 +207,36 @@ class SimConfig:
     # (DESIGN.md §12): paged-eligible profiles skip the materialized
     # decompress, so their V/s_dec term leaves the critical path.
     paged: bool = False
+    # Speculative decode on the decode fleet (DESIGN.md §15): spec_k > 0
+    # divides each request's decode time by its committed-tokens-per-
+    # verify-step, derived from spec_accept via the controller's
+    # geometric model.  Per-request acceptance is a pure hash of
+    # (seed, rid) — no rng state is consumed, so replays stay a pure
+    # function of (config, seed) and spec_k = 0 is bit-identical to
+    # runs that predate the field.
+    spec_k: int = 0
+    spec_accept: float = 0.0
     seed: int = 0
+
+
+def spec_tokens_per_step(cfg: SimConfig, rid: int) -> float:
+    """Committed tokens per verify step for request ``rid`` under
+    ``cfg``'s speculation settings — the simulator's acceptance model.
+
+    The per-request accept rate is ``cfg.spec_accept`` jittered by a
+    Weyl-style integer hash of (seed, rid): requests repeat themselves
+    to different degrees, but which ones do must not depend on run
+    order, so the jitter is a pure function of the request identity and
+    consumes NO rng state (the replay invariant in the module
+    docstring).  The accept rate then feeds the controller's own
+    geometric model (:func:`expected_tokens_per_step`), so what the
+    simulator bills and what the controller predicts agree by
+    construction.  ``spec_k <= 0`` returns exactly 1.0."""
+    if cfg.spec_k <= 0:
+        return 1.0
+    u = ((rid * 2654435761 + cfg.seed * 97) % 1000) / 1000.0
+    r = min(max(cfg.spec_accept + 0.1 * (u - 0.5), 0.0), 1.0)
+    return expected_tokens_per_step(cfg.spec_k, r)
 
 
 @dataclass
@@ -522,6 +554,7 @@ class Simulator:
         heappush, heappop = heapq.heappush, heapq.heappop
         isfinite = math.isfinite
         default_metric = self._default_metric
+        spec_on = cfg.spec_k > 0
 
         for req in requests:
             arrival = req.arrival
@@ -549,8 +582,12 @@ class Simulator:
             ttft = t - arrival
             req.ttft = ttft
 
-            # decode on the earliest-free node
+            # decode on the earliest-free node (same two-step arithmetic
+            # as _run_pd: divide-then-divide, never a fused expression,
+            # so the floats match bit-for-bit)
             t_dec_base = req.out_tokens / dec_tok
+            if spec_on:
+                t_dec_base /= spec_tokens_per_step(cfg, req.rid)
             free2, nid2 = heappop(dheap)
             s1 = free2 if free2 > t else t
             t_end = s1 + t_dec_base / dspeed[nid2]
@@ -678,6 +715,8 @@ class Simulator:
         start = req.arrival if start is None else start
         t_prefill_base = req.ctx_tokens / cfg.prefill_tok_s
         t_decode_base = req.out_tokens / cfg.decode_tok_s
+        if cfg.spec_k > 0:
+            t_decode_base /= spec_tokens_per_step(cfg, req.rid)
         ctx = self._service_context(req, t_prefill_base + t_decode_base) \
             if self.policy.needs_ctx else None
         profile, decision = self.policy.choose(req, ctx)
@@ -736,6 +775,8 @@ class Simulator:
         start = req.arrival if start is None else start
         t_prefill_base = req.ctx_tokens / cfg.prefill_tok_s
         t_decode_base = req.out_tokens / cfg.decode_tok_s
+        if cfg.spec_k > 0:
+            t_decode_base /= spec_tokens_per_step(cfg, req.rid)
 
         # prefill
         t, q_wait, src = self._run_on_pool(self.prefill, start,

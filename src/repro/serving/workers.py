@@ -204,6 +204,29 @@ class RuntimeConfig:
     # Smaller values oversubscribe HBM (more slots than worst-case fit);
     # a slot that cannot grow raises ``ArenaOutOfPages``.
     arena_pages: Optional[int] = None
+    # Speculative + lookahead decoding (DESIGN.md §15).  spec_k = 0
+    # (default) keeps today's one-token-per-iteration arena decode,
+    # bit-identical.  spec_k > 0 turns each decode iteration into a draft
+    # phase (up to k proposed tokens per slot) + ONE masked multi-token
+    # verify step; greedy verification keeps the token stream exact.
+    spec_k: int = 0
+    # Draft source: "ngram" = draft-free per-slot suffix-match lookahead
+    # over prompt + generated tokens; "model" = two-model path (a draft
+    # model's own dense arena proposes its greedy continuations).
+    spec_kind: str = "ngram"
+    # Controller-adaptive speculation length: the controller's per-route
+    # accept-rate estimate picks each request's k from spec_candidates
+    # (capped at spec_k); False applies spec_k uniformly.
+    spec_adaptive: bool = False
+    spec_candidates: Tuple[int, ...] = (0, 2, 4)
+
+    @property
+    def arena_max_len(self) -> int:
+        """Arena row length.  The speculative path scatters up to spec_k
+        extra in-flight KV rows past the last committed position, so the
+        margin grows with the speculation width (spec_k = 0 keeps the
+        historical seq + decode_tokens + 2 exactly)."""
+        return self.seq + self.decode_tokens + 2 + self.spec_k
 
 
 @dataclass
@@ -243,10 +266,26 @@ class ServedRequest:
     slo_metric: str = "jct"
     t_slo: float = 0.0
     slo_violated: bool = False
+    # Speculative-decode outcome (DESIGN.md §15): the k this request ran
+    # with, verify steps taken, tokens committed by them, and the draft
+    # offer/accept tallies behind the controller's accept-rate feedback.
+    spec_k: int = 0
+    verify_steps: int = 0
+    spec_committed: int = 0
+    drafts_offered: int = 0
+    drafts_accepted: int = 0
 
     @property
     def jct(self) -> float:
         return self.done - self.arrival
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Mean committed tokens per verify step (1.0 when not run
+        speculatively — every plain iteration commits one token)."""
+        if self.verify_steps <= 0:
+            return 1.0
+        return self.spec_committed / self.verify_steps
 
 
 @dataclass
@@ -270,6 +309,13 @@ class Slot:
     # not the off-critical-path pool write.
     ctx: Optional[ServiceContext] = None
     decision: Optional[Decision] = None
+    # Speculative decode state (DESIGN.md §15): this slot's draft budget
+    # and its running verify/accept tallies.
+    spec_k: int = 0
+    verify_steps: int = 0
+    spec_committed: int = 0
+    drafts_offered: int = 0
+    drafts_accepted: int = 0
 
 
 @dataclass
@@ -320,9 +366,8 @@ class PrefillWorker:
     # ------------------------------------------------------------------
     def _prefill_fn(self):
         if self._pre1 is None:
-            max_len = self.cfg.seq + self.cfg.decode_tokens + 2
             self._pre1, _, _ = _jitted_steps(
-                self.model.cfg.name, self.cfg.seq, 1, max_len)
+                self.model.cfg.name, self.cfg.seq, 1, self.cfg.arena_max_len)
         return self._pre1
 
     def expected_prefill_s(self, ctx_tokens: int) -> float:
@@ -362,12 +407,18 @@ class PrefillWorker:
         residual bandit learns each link's drift separately.  Returns
         ``(comp, ctx, decision, profile, t_compress)``."""
         kv = extract_kv(self.model.cfg, caches, 0, upto=self.cfg.seq)
+        # Serial decode-stream time under the virtual clock feeds the
+        # controller's speculation-length choice (DESIGN.md §15); 0 when
+        # wall-clock-measured (the k-selection then ranks on modelled
+        # throughput alone).
+        t_decode = (req.out_tokens / self.cfg.decode_tok_s
+                    if self.cfg.decode_tok_s else 0.0)
         ctx = ServiceContext(
             workload=req.workload, bandwidth=bandwidth,
             t_slo=req.t_slo, q_min=req.q_min, t_model=t_prefill,
             kv_bytes=kv.nbytes_wire(),
             slo_metric=req.resolved_slo_metric(slo_default),
-            route=route)
+            route=route, decode_time=t_decode)
         profile, decision = _select_profile(self.controller,
                                             self.static_profile, ctx)
         comps, _, t_wall = compress_kvs(profile.strategy, [kv])
@@ -392,7 +443,7 @@ class DecodeWorker:
         self.cfg = cfg
         self.n_slots = n_slots
         self.store = store
-        self.max_len = cfg.seq + cfg.decode_tokens + 2
+        self.max_len = cfg.arena_max_len
         self.slots: Dict[int, Slot] = {}
         # LIFO so a hot slot's cache row is reused first (same recycling
         # discipline the scheduler used when it owned the slot ids).
@@ -410,6 +461,14 @@ class DecodeWorker:
         self._qcodes: Any = None
         self._qscales: Any = None
         self._quant_len = np.zeros(n_slots, np.int32)
+        # Speculative decode state (DESIGN.md §15): the draft proposer
+        # (built lazily when a speculative slot first lands) and the
+        # worker-lifetime accept tallies behind the benchmark's
+        # tokens-per-step metric.
+        self._draft: Any = None
+        self._verify_fns: Dict[int, Any] = {}   # width -> jitted verify
+        self.verify_steps = 0
+        self.spec_committed = 0
 
     @property
     def _pps(self) -> int:
@@ -530,10 +589,38 @@ class DecodeWorker:
         return int(first), t_decompress
 
     # ------------------------------------------------------------------
-    def occupy(self, slot: Slot, first: int) -> None:
+    def draft(self):
+        """The worker's draft proposer (cfg.spec_kind), built lazily."""
+        if self._draft is None:
+            from repro.serving.speculative import ModelDraft, NGramDraft
+            if self.cfg.spec_kind == "model":
+                self._draft = ModelDraft(self.model, self.cfg.seq,
+                                         self.n_slots, self.max_len)
+            else:
+                self._draft = NGramDraft()
+        return self._draft
+
+    def _verify_fn(self, width: int):
+        """Jitted multi-token verify for ``width`` (one compile per
+        speculation width; the per-slot accept length stays traced)."""
+        fn = self._verify_fns.get(width)
+        if fn is None:
+            from repro.core.quality import _paged_verify_steps, _verify_steps
+            if self.cfg.paged:
+                fn = _paged_verify_steps(self.model.cfg.name,
+                                         self.cfg.page_size, width)
+            else:
+                fn = _verify_steps(self.model.cfg.name, self.max_len, width)
+            self._verify_fns[width] = fn
+        return fn
+
+    def occupy(self, slot: Slot, first: int,
+               prompt: Optional[Sequence[int]] = None) -> None:
         self.slots[slot.req.rid] = slot
         self._positions[slot.idx] = self.cfg.seq
         self._last_tok[slot.idx] = first
+        if slot.spec_k > 0 and prompt is not None:
+            self.draft().start(slot.idx, slot.req.rid, prompt, first)
 
     def release(self, slot: Slot) -> None:
         self.free_slots.append(slot.idx)
@@ -541,12 +628,31 @@ class DecodeWorker:
         if self.cfg.paged and self.page_table is not None:
             self.page_table.release(slot.idx)
             self._quant_len[slot.idx] = 0
+        if slot.spec_k > 0 and self._draft is not None:
+            self._draft.stop(slot.idx, slot.req.rid)
 
     # ------------------------------------------------------------------
     def decode_iteration(self, active: List[Slot]) -> float:
-        """Advance every slot in ``active`` one token with a SINGLE masked
-        jitted arena decode (per-slot positions, on-device argmax, one
-        (B,) token pull).  Returns the measured wall seconds."""
+        """Advance every slot in ``active`` with a SINGLE masked jitted
+        arena call.  Without speculation (or when no slot has a draft this
+        round) that is the historical one-token decode, bit-identical to
+        pre-speculative builds.  With drafts it is ONE multi-token verify
+        step: each slot commits the longest draft prefix the target would
+        have emitted plus the bonus token (DESIGN.md §15) — token-exact
+        with sequential decode, 1..width tokens per slot per iteration.
+        Returns the measured wall seconds."""
+        proposals: Dict[int, List[int]] = {}
+        if self.cfg.spec_k > 0:
+            spec = [s for s in active if s.spec_k > 0]
+            if spec:
+                items = [(s.idx, s.req.rid, int(self._last_tok[s.idx]),
+                          int(self._positions[s.idx])) for s in spec]
+                budgets = {s.idx: s.spec_k for s in spec}
+                proposals = {i: d for i, d in
+                             self.draft().propose_all(items, budgets).items()
+                             if d}
+        if proposals:
+            return self._verify_iteration(active, proposals)
         mask = np.zeros(self.n_slots, bool)
         for slot in active:
             mask[slot.idx] = True
@@ -579,5 +685,70 @@ class DecodeWorker:
             slot.toks.append(t)
             self._last_tok[slot.idx] = t
             self._positions[slot.idx] += 1
+            if slot.spec_k > 0 and self._draft is not None:
+                self._draft.commit(slot.idx, slot.req.rid, [t])
         self.decode_steps += 1
+        return wall
+
+    def _verify_iteration(self, active: List[Slot],
+                          proposals: Dict[int, List[int]]) -> float:
+        """One masked multi-token verify step over the arena.  Every
+        active slot rides along at its own draft length (no drafts = a
+        plain one-token step inside the wide call); rejected draft
+        positions never advance a slot and — paged — their over-ensured
+        tail pages are rolled back before the pages can leak."""
+        from repro.serving.speculative import accept_length
+        width = max(len(d) for d in proposals.values()) + 1
+        mask = np.zeros(self.n_slots, bool)
+        toks = np.zeros((self.n_slots, width), np.int32)
+        for slot in active:
+            mask[slot.idx] = True
+            toks[slot.idx, 0] = self._last_tok[slot.idx]
+            for j, d in enumerate(proposals.get(slot.idx, [])):
+                toks[slot.idx, 1 + j] = d
+        fn = self._verify_fn(width)
+        self.ensure_arena()
+        if self.cfg.paged:
+            # Ensure through the worst-case commit (all drafts accepted);
+            # the rejected tail is released again right after the verify.
+            for slot in active:
+                need = (int(self._positions[slot.idx]) + 1
+                        + len(proposals.get(slot.idx, [])))
+                self.page_table.ensure(slot.idx, need)
+            t0 = time.perf_counter()
+            out, self._arena = fn(
+                self.model.params, self._arena, self._qcodes,
+                self._qscales, jnp.asarray(self._block_tables()),
+                jnp.asarray(self._quant_len), jnp.asarray(toks),
+                jnp.asarray(self._positions), jnp.asarray(mask))
+        else:
+            t0 = time.perf_counter()
+            out, self._arena = fn(
+                self.model.params, self._arena, jnp.asarray(toks),
+                jnp.asarray(self._positions), jnp.asarray(mask))
+        # lint: sync-ok(the step's single sanctioned sync - one batched pull)
+        out = np.asarray(out)
+        wall = time.perf_counter() - t0
+        for slot in active:
+            drafts = proposals.get(slot.idx, [])
+            row = out[slot.idx]
+            a = accept_length(drafts, row)
+            needed = slot.req.out_tokens + 1 - len(slot.toks)
+            c = min(a + 1, max(needed, 1))
+            committed = [int(row[j]) for j in range(c)]
+            slot.toks.extend(committed)
+            self._last_tok[slot.idx] = committed[-1]
+            self._positions[slot.idx] += c
+            slot.verify_steps += 1
+            slot.spec_committed += c
+            slot.drafts_offered += len(drafts)
+            slot.drafts_accepted += min(a, c - 1)
+            self.spec_committed += c
+            if slot.spec_k > 0 and self._draft is not None:
+                self._draft.commit(slot.idx, slot.req.rid, committed)
+            if self.cfg.paged and drafts:
+                self.page_table.release_tail(
+                    slot.idx, int(self._positions[slot.idx]))
+        self.decode_steps += 1
+        self.verify_steps += 1
         return wall

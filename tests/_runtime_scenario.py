@@ -40,7 +40,10 @@ def params_digest(params) -> str:
     return h.hexdigest()[:16]
 
 
-def build_runtime(reference_model=None):
+def build_runtime(reference_model=None, **cfg_overrides):
+    """``cfg_overrides`` lands extra RuntimeConfig fields (mode, paged,
+    spec_k, ...) on top of the pinned scenario config — the fixture
+    parity tests sweep runtime variants over the SAME request stream."""
     from repro.core.profiles import Profile
     from repro.core.strategy import StrategyConfig
     from repro.serving import BandwidthTrace, GBPS, SchedulerConfig
@@ -53,7 +56,7 @@ def build_runtime(reference_model=None):
     rt = ServingRuntime(
         static_profile=profile,
         config=RuntimeConfig(seq=64, decode_tokens=6, prefill_tok_s=2000.0,
-                             decode_tok_s=500.0),
+                             decode_tok_s=500.0, **cfg_overrides),
         trace=BandwidthTrace.constant(1 * GBPS),
         scheduler=SchedulerConfig(max_slots=6, max_prefills_per_step=2,
                                   max_queue=32))

@@ -288,3 +288,82 @@ def test_paged_attention_scratch_pages_inert():
                             jnp.asarray(bt_np), kv_lens, bits=8,
                             group=group, interpret=True)
     np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
+
+
+# ---------------------------------------------------------------------------
+# Paged multi-token verify attention (ISSUE 10 tentpole): W consecutive
+# verify queries per slot with the staircase causal mask —
+# paged_verify_attention_op vs paged_verify_attention_ref.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("b,hkv,gq,d,s,group,ps,w", [
+    (2, 2, 4, 64, 256, 32, 16, 3),
+    (1, 4, 8, 128, 128, 64, 8, 5),
+    (3, 1, 2, 128, 512, 128, 64, 2),
+])
+def test_paged_verify_attention_matches_ref(bits, b, hkv, gq, d, s, group,
+                                            ps, w):
+    rng = np.random.default_rng(bits * 77 + s + ps + w)
+    q = jnp.asarray(rng.standard_normal((b, hkv, w, gq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    (pools, bt, _) = _paged_pools(k, v, bits, group, ps, rng)
+    # keep kv_lens + w - 1 <= s so every staircase row stays in range
+    kv_lens = jnp.asarray([s - w, max(s // 2 - 3, 1), 1][:b], jnp.int32)
+    out = K.paged_verify_attention_op(q, *pools, bt, kv_lens, bits=bits,
+                                      group=group, interpret=True)
+    ref = K.paged_verify_attention_ref(q, *pools, bt, kv_lens, bits=bits,
+                                       group=group)
+    assert out.shape == (b, hkv, w, gq, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_paged_verify_attention_width1_matches_paged_attention():
+    """W=1 degenerates to the single-token paged decode kernel: the
+    staircase mask collapses to the plain kv_len mask."""
+    rng = np.random.default_rng(11)
+    b, hkv, gq, d, s, group, ps = 2, 2, 4, 64, 128, 32, 16
+    q = jnp.asarray(rng.standard_normal((b, hkv, 1, gq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    (pools, bt, _) = _paged_pools(k, v, 8, group, ps, rng)
+    kv_lens = jnp.asarray([s, s // 2], jnp.int32)
+    ver = K.paged_verify_attention_op(q, *pools, bt, kv_lens, bits=8,
+                                      group=group, interpret=True)
+    dec = K.paged_attention_op(q[:, :, 0], *pools, bt, kv_lens, bits=8,
+                               group=group, interpret=True)
+    np.testing.assert_allclose(np.asarray(ver[:, :, 0]), np.asarray(dec),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_paged_verify_attention_rejected_suffix_blind():
+    """Query j must be blind to positions > kv_lens + j - 1: clobbering
+    the KV rows of LATER verify positions cannot change row j's output —
+    the property that makes host-side accept-prefix decisions sound."""
+    rng = np.random.default_rng(23)
+    b, hkv, gq, d, s, group, ps, w = 1, 2, 4, 64, 128, 32, 16, 4
+    q = jnp.asarray(rng.standard_normal((b, hkv, w, gq, d)), jnp.float32)
+    k = rng.standard_normal((b, hkv, s, d)).astype(np.float32)
+    v = rng.standard_normal((b, hkv, s, d)).astype(np.float32)
+    base = 40  # query 0's visible length; verify rows sit at 39..42
+    (pools, bt, _) = _paged_pools(jnp.asarray(k), jnp.asarray(v), 8, group,
+                                  ps, np.random.default_rng(99))
+    out_a = K.paged_verify_attention_op(q, *pools, bt,
+                                        jnp.asarray([base], jnp.int32),
+                                        bits=8, group=group, interpret=True)
+    # clobber the last verify position's KV (position base + w - 2 = 42);
+    # same pool-scatter seed, so the block tables are identical
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, base + w - 2] = 9.0
+    v2[:, :, base + w - 2] = -9.0
+    (pools2, _, _) = _paged_pools(jnp.asarray(k2), jnp.asarray(v2), 8, group,
+                                  ps, np.random.default_rng(99))
+    out_b = K.paged_verify_attention_op(q, *pools2, bt,
+                                        jnp.asarray([base], jnp.int32),
+                                        bits=8, group=group, interpret=True)
+    # rows 0..w-2 never see position base+w-2; only the last row may move
+    np.testing.assert_array_equal(np.asarray(out_a[:, :, :w - 1]),
+                                  np.asarray(out_b[:, :, :w - 1]))
+    assert not np.array_equal(np.asarray(out_a[:, :, w - 1]),
+                              np.asarray(out_b[:, :, w - 1]))
